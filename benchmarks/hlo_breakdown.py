@@ -1,0 +1,84 @@
+"""HLO breakdown for §Perf hypothesis formation: compile ONE unrolled layer
+(the dry-run probe config) of an (arch × shape) cell and rank ops by result
+bytes, with collectives broken out by shape — the 'profile' the hillclimb
+iterates on (no real-TPU timings exist in this container).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch deepseek-v3-671b \
+      --shape train_4k [--top 25] [--layers 1]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import re
+
+
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"([a-z0-9-]+)\(")
+
+
+def main():
+    from repro.launch.dryrun import (SHAPE_RE, DTYPE_BYTES, _compile_metrics,
+                                     _shape_bytes, _lower_any)
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import layer_plan
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--layers", type=int, default=1, help="unrolled periods")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    plan = layer_plan(cfg)
+    probe = cfg.replace(n_layers=plan.prefix + args.layers * plan.period,
+                        scan_layers=False)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        lowered = _lower_any(probe, SHAPES[args.shape], mesh)
+        compiled = lowered.compile()
+    text = compiled.as_text()
+
+    by_kind_bytes = collections.Counter()
+    by_kind_count = collections.Counter()
+    biggest = []
+    for line in text.splitlines():
+        m = OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if kind in ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast"):
+            continue
+        nbytes = _shape_bytes(shape_str)
+        by_kind_bytes[kind] += nbytes
+        by_kind_count[kind] += 1
+        biggest.append((nbytes, kind, shape_str.strip()[:90]))
+
+    cost = compiled.cost_analysis()
+    print(f"# {args.arch} x {args.shape} probe ({args.layers} period(s), "
+          f"mesh {'2x16x16' if args.multi_pod else '16x16'})")
+    print(f"flops/device={cost.get('flops', 0):.4e}  "
+          f"bytes/device={cost.get('bytes accessed', 0):.4e}")
+    print("\n## result bytes by op kind (per device)")
+    for kind, v in by_kind_bytes.most_common(args.top):
+        print(f"{kind:26s} {v/2**30:10.3f} GiB  x{by_kind_count[kind]}")
+    print("\n## largest single ops")
+    for nbytes, kind, shape in sorted(biggest, reverse=True)[: args.top]:
+        print(f"{nbytes/2**30:10.3f} GiB  {kind:22s} {shape}")
+    print("\n## collectives")
+    for nbytes, kind, shape in sorted(
+            (b for b in biggest if "all-" in b[1] or "collective" in b[1]
+             or "reduce-scatter" in b[1]), reverse=True)[: args.top]:
+        print(f"{nbytes/2**30:10.3f} GiB  {kind:22s} {shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Reproduction of the paper's Figures 5-9 as data series (CSV-friendly).
+
+fig5: MMS vertex count / Moore bound -> 8/9        (Section 4.2)
+fig6: MMS link utilization -> 8/9                  (Section 4.2, Fig. 6)
+fig7: cost figure k̄/u vs terminals at R<=64, with the Eq.(5) bound curve
+fig8: scalability T(R) per family
+fig9: PN / demi-PN / SF-MMS k̄ and k̄/u vs terminals
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (all_realizations, mms_graph, moore_bound,
+                        realizations_for_family, terminals_bound, utilization)
+from repro.core.gf import is_prime_power
+
+MMS_QS = [5, 7, 8, 9, 11, 13, 16, 17, 19, 23, 25]
+
+
+def fig5():
+    """N(MMS)/M(Δ,2) convergence to 8/9."""
+    rows = []
+    for q in MMS_QS:
+        eps = {1: 1, 3: -1, 0: 0}[q % 4]
+        n = 2 * q * q
+        delta = (3 * q - eps) // 2
+        ratio = n / moore_bound(delta, 2)
+        rows.append({"q": q, "N": n, "moore": moore_bound(delta, 2),
+                     "ratio": round(ratio, 4)})
+    tail = [r["ratio"] for r in rows[-3:]]
+    err = abs(np.mean(tail) - 8 / 9) / (8 / 9)
+    return rows, err
+
+
+def fig6():
+    """Numeric u(MMS(q)) — converges to 8/9 (u=1 exactly at q=5, the
+    Hoffman–Singleton Moore graph)."""
+    rows = []
+    for q in MMS_QS:
+        rep = utilization(mms_graph(q))
+        rows.append({"q": q, "N": 2 * q * q, "u": round(rep.u, 4),
+                     "kbar": round(rep.kbar, 4)})
+    assert abs(rows[0]["u"] - 1.0) < 1e-9  # Hoffman–Singleton
+    tail = [r["u"] for r in rows[-4:]]
+    err = abs(np.mean(tail) - 8 / 9) / (8 / 9)
+    return rows, err
+
+
+def fig7(max_radix: int = 64):
+    """k̄/u vs T for each family at R<=64 + the generalized-Moore bound."""
+    rows = []
+    for fam, reals in all_realizations(max_radix).items():
+        for r in reals:
+            if r.terminals < 64:
+                continue
+            rows.append({"family": fam, "param": r.param,
+                         "T": round(r.terminals), "R": round(r.radix, 1),
+                         "kbar_over_u": round(r.cost_figure, 4)})
+    # bound curve from Eq. (5): for k = 2..4 sweep kbar in (k-1, k)
+    bound = []
+    for k in (2, 3, 4):
+        for kbar in np.linspace(k - 0.98, k - 0.02, 25):
+            t = terminals_bound(max_radix, k, kbar)
+            bound.append({"family": "bound", "param": k, "T": round(t),
+                          "R": max_radix, "kbar_over_u": round(kbar, 4)})
+    # validation: every realization sits on/above the bound at its T
+    err = 0.0
+    bt = np.array([b["T"] for b in bound])
+    bk = np.array([b["kbar_over_u"] for b in bound])
+    order = np.argsort(bt)
+    bt, bk = bt[order], bk[order]
+    for r in rows:
+        if r["family"] in ("mms", "random"):  # u<1 families sit above
+            continue
+        i = np.searchsorted(bt, r["T"])
+        if i >= len(bt):
+            continue
+        # generalized-Moore optimality: kbar/u >= bound_kbar(T) - small slack
+        if r["kbar_over_u"] < bk[i] - 0.08:
+            err = max(err, (bk[i] - r["kbar_over_u"]) / bk[i])
+    return rows + bound, err
+
+
+def fig8(max_radix: int = 64):
+    """Scalability T(R): max terminals per family for radix budgets."""
+    rows = []
+    for fam, reals in all_realizations(max_radix).items():
+        best: dict[int, float] = {}
+        for r in reals:
+            rb = int(np.ceil(r.radix))
+            best[rb] = max(best.get(rb, 0), r.terminals)
+        for rb in sorted(best):
+            rows.append({"family": fam, "R": rb, "T_max": round(best[rb])})
+    return rows, 0.0
+
+
+def fig9(max_radix: int = 64):
+    """PN vs demi-PN vs SF-MMS: k̄ and k̄/u vs T (the paper's headline)."""
+    rows = []
+    for fam in ("pn", "demi_pn", "mms"):
+        for r in realizations_for_family(fam, max_radix):
+            rows.append({"family": fam, "T": round(r.terminals),
+                         "kbar": round(r.kbar, 4),
+                         "kbar_over_u": round(r.cost_figure, 4)})
+    # headline check: above ~1000 terminals demi-PN has lower k̄/u than MMS
+    demi = {r["T"]: r["kbar_over_u"] for r in rows if r["family"] == "demi_pn"}
+    mms = [(r["T"], r["kbar_over_u"]) for r in rows if r["family"] == "mms"]
+    viol = 0
+    for t, c in mms:
+        if t < 1000:
+            continue
+        close = min(demi.items(), key=lambda kv: abs(np.log(kv[0] / t)))
+        if close[1] > c + 1e-9:
+            viol += 1
+    return rows, float(viol)

@@ -1,0 +1,111 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from the dry-run
+artifacts (idempotent; sections are delimited by HTML markers).
+
+Usage: PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from .roofline import (DRYRUN_DIR, HBM_BW, LINK_BW, PEAK_FLOPS, format_markdown,
+                       load_records, roofline_row, roofline_table)
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_opt")
+
+
+def _inject(text: str, marker: str, payload: str) -> str:
+    """Replace '<!-- marker -->' (and any previously injected block that
+    follows it up to the next '---' or section marker) with the payload."""
+    begin = f"<!-- {marker} -->"
+    end = f"<!-- /{marker} -->"
+    block = f"{begin}\n{payload}\n{end}"
+    if end in text:
+        pat = re.compile(re.escape(begin) + r".*?" + re.escape(end), re.S)
+        return pat.sub(lambda _: block, text)
+    return text.replace(begin, block)
+
+
+def dryrun_summary() -> str:
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] == "error"]
+    lines = [f"**Status: {len(ok)} cells compiled OK, {len(skipped)} skipped "
+             f"(documented long_500k), {len(err)} errors.**", ""]
+    lines.append("| arch | shape | mesh | HBM GiB/device (args+temp) | "
+                 "compile s | scan reps |")
+    lines.append("|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {(m['argument_bytes'] + m['temp_bytes']) / 2**30:.2f} "
+            f"| {r['compile_seconds']} | {r.get('scan_reps') or '-'} |")
+    return "\n".join(lines)
+
+
+def perf_ledger() -> str:
+    """Baseline vs optimized cells from experiments/dryrun_opt/<tag>/."""
+    if not os.path.isdir(OPT_DIR):
+        return "(no optimized runs yet)"
+    lines = ["| cell | variant | compute s | memory s | collective s | "
+             "HBM GiB | MFU raw / kernel-adj |", "|---|---|---|---|---|---|---|"]
+    base_by_key = {}
+    for r in load_records():
+        if r["status"] == "ok":
+            base_by_key[(r["arch"], r["shape"], r["mesh"])] = r
+
+    def fmt(tag, r):
+        pf = r.get("perf_flags")
+        if pf is not None:
+            dpom = "dp_over_model" in pf
+        else:  # older artifacts: every sm_/mb_ variant ran dp_over_model
+            dpom = (any(t in tag for t in ("dpom", "repff", "chunk"))
+                    or tag.startswith(("sm_", "mb_")))
+        row = roofline_row(r, dpom=dpom)
+        m = r["memory"]
+        return (f"| {r['arch']} × {r['shape']} ({r['mesh']}) | {tag} "
+                f"| {row['t_compute_s']:.3f} | {row['t_memory_s']:.3f} "
+                f"| {row['t_collective_s']:.3f} "
+                f"| {(m['argument_bytes'] + m['temp_bytes']) / 2**30:.1f} "
+                f"| {row['roofline_mfu']:.4f} "
+                f"/ {row['roofline_mfu_kernel_adj']:.4f} |")
+
+    seen_base = set()
+    for tag_dir in sorted(glob.glob(os.path.join(OPT_DIR, "*"))):
+        tag = os.path.basename(tag_dir)
+        for path in sorted(glob.glob(os.path.join(tag_dir, "*.json"))):
+            with open(path) as f:
+                r = json.load(f)
+            if r.get("status") != "ok":
+                lines.append(f"| {tag} | ERROR | {r.get('error', '')[:60]} |")
+                continue
+            key = (r["arch"], r["shape"], r["mesh"])
+            if key in base_by_key and key not in seen_base:
+                seen_base.add(key)
+                lines.append(fmt("**baseline**", base_by_key[key]))
+            lines.append(fmt(tag, r))
+    return "\n".join(lines)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    rows, skipped, errors = roofline_table("16x16")
+    text = _inject(text, "ROOFLINE-TABLE", format_markdown(rows))
+    text = _inject(text, "DRYRUN-SUMMARY", dryrun_summary())
+    text = _inject(text, "PERF-LEDGER", perf_ledger())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(f"EXPERIMENTS.md updated: {len(rows)} roofline rows, "
+          f"{len(skipped)} skipped, {len(errors)} errors")
+
+
+if __name__ == "__main__":
+    main()

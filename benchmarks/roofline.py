@@ -1,0 +1,155 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) cell from the
+dry-run artifacts.
+
+    compute   = HLO_FLOPs / (chips x 197e12 FLOP/s)
+    memory    = HLO_bytes / (chips x 819e9 B/s)
+    collective= collective_bytes / (chips x 50e9 B/s per link)
+
+HLO quantities from compiled.cost_analysis() are PER-DEVICE after SPMD
+partitioning (verified in tests), so chips divide out: term = per_device /
+peak.  MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve).  The
+fabric-aware refinement multiplies the collective term by k̄/u of the
+chosen interconnect (the paper's Eq. 2 figure).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.models import build, model_flops
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+LINK_BW = 50e9             # B/s / link (ICI)
+
+# Measured B/element streamed by the pure-jnp mirrors for tensors the Pallas
+# kernels keep in VMEM on the TPU target (benchmarks: standalone AOT compile
+# of ops.attention / ops.ssd fwd and grad at (2,4/2,1024,64) resp.
+# (2,1024,8,64,chunk=256); linear q/k/v/o terms subtracted for attention).
+ATTN_BPE = {"train": 108.8, "prefill": 36.1}
+SSD_BPE = {"train": 172.4, "prefill": 44.7}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _vmem_resident_bytes(cfg, shape, *, model_axis=16, data_axis=16,
+                         dpom=False) -> float:
+    """Per-device bytes the jnp mirror streams through HBM for score/chunk
+    tensors that the validated Pallas kernels (flash fwd+bwd, ssd_scan) hold
+    in VMEM on the deploy target.  Used for the kernel-adjusted memory term."""
+    from repro.models import layer_plan
+    if shape.kind == "decode":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    b_loc = b / data_axis
+    plan = layer_plan(cfg)
+    h = cfg.n_heads
+    h_loc = h / model_axis if h % model_axis == 0 else h
+    if dpom and h % model_axis and b % (data_axis * model_axis) == 0:
+        b_loc, h_loc = b / (data_axis * model_axis), h
+    attn_elems = ssd_elems = 0.0
+    for kind in plan.kinds:
+        if kind == "attn":
+            attn_elems += b_loc * h_loc * s * s
+        elif kind == "dec_xattn":
+            mem = s // cfg.encoder.frame_ratio if cfg.encoder else s
+            attn_elems += b_loc * h_loc * s * (s + mem)
+        elif kind == "xattn":
+            attn_elems += b_loc * h_loc * s * cfg.vision.n_image_tokens
+        elif kind == "ssd":
+            ssm = cfg.ssm
+            hs = (ssm.expand * cfg.d_model) // ssm.head_dim
+            hs_loc = hs / model_axis if hs % model_axis == 0 else hs
+            bl = b_loc
+            if dpom and hs % model_axis and b % (data_axis * model_axis) == 0:
+                bl, hs_loc = b / (data_axis * model_axis), hs
+            ssd_elems += bl * hs_loc * s * min(ssm.chunk, s)
+    if cfg.encoder is not None:
+        sf = max(1, s // cfg.encoder.frame_ratio)
+        attn_elems += cfg.encoder.n_layers * b_loc * h_loc * sf * sf
+    f = "train" if shape.kind == "train" else "prefill"
+    return attn_elems * ATTN_BPE[f] + ssd_elems * SSD_BPE[f]
+
+
+def roofline_row(rec: dict, dpom: bool = False) -> dict:
+    arch = rec["arch"]
+    shape = SHAPES[rec["shape"]]
+    cfg = get_arch(arch)
+    flops = rec["flops"]
+    bytes_acc = rec["bytes_accessed"]
+    coll = rec["collective_bytes_per_device"].get("total", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mflops = model_flops(cfg, tokens, "train" if shape.kind == "train" else "serve")
+    hlo_global = flops * rec["n_devices"]
+    useful = mflops / hlo_global if hlo_global else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful work per second at the bound vs peak
+    mfu_bound = (mflops / rec["n_devices"] / bound) / PEAK_FLOPS if bound else 0.0
+    # kernel-adjusted memory term: subtract streams the Pallas kernels keep
+    # in VMEM on the deploy target (never below the compulsory HBM floor)
+    vmem = _vmem_resident_bytes(cfg, shape, dpom=dpom)
+    t_mem_adj = max(bytes_acc - vmem, 0.05 * bytes_acc) / HBM_BW
+    bound_adj = max(t_compute, t_mem_adj, t_coll)
+    mfu_adj = (mflops / rec["n_devices"] / bound_adj) / PEAK_FLOPS \
+        if bound_adj else 0.0
+    return {
+        "arch": arch, "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mflops, "hlo_flops_global": hlo_global,
+        "useful_ratio": useful, "roofline_mfu": mfu_bound,
+        "t_memory_kernel_adj_s": t_mem_adj, "roofline_mfu_kernel_adj": mfu_adj,
+        "hbm_gib": (rec["memory"]["argument_bytes"]
+                    + rec["memory"]["temp_bytes"]) / 2**30,
+    }
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") not in (mesh, None):
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_table(mesh: str = "16x16"):
+    rows, skipped, errors = [], [], []
+    for r in load_records():
+        if r.get("mesh") != mesh and r["status"] == "ok":
+            continue
+        if r["status"] == "ok":
+            rows.append(roofline_row(r))
+        elif r["status"] == "skipped":
+            key = (r.get("arch"), r.get("shape"))
+            skipped.append({"cell": os.path.basename(str(key)), **r})
+        else:
+            errors.append(r)
+    return rows, skipped, errors
+
+
+def format_markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | mem s (kernel-adj) "
+           "| collective s | dominant | MODEL/HLO | MFU | MFU (kernel-adj) |"
+           "\n|---|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_memory_kernel_adj_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_mfu']:.3f} "
+            f"| {r['roofline_mfu_kernel_adj']:.3f} |")
+    return "\n".join(lines)

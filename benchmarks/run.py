@@ -1,0 +1,75 @@
+"""Benchmark harness: one entry per paper table/figure + the fabric planner
++ the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows where
+``derived`` is the headline validation number for that artifact (max
+relative error vs. the paper, or the key reproduced quantity).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _run(name, fn, derive):
+    t0 = time.perf_counter()
+    out = fn()
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{dt:.1f},{derive(out)}", flush=True)
+    return out
+
+
+def main() -> None:
+    from . import paper_figures as figs
+    from . import paper_tables as tabs
+
+    print("name,us_per_call,derived")
+    _run("table2_topological_params", tabs.table2, lambda o: f"max_err={o[1]:.4f}")
+    _run("table3_structural_params", tabs.table3, lambda o: f"max_err={o[1]:.4f}")
+    _run("table4_10k_nodes", tabs.table4, lambda o: f"max_err={o[1]:.4f}")
+    _run("table5_25k_nodes", tabs.table5, lambda o: f"max_err={o[1]:.4f}")
+    _run("table6_indirect", tabs.table6, lambda o: f"max_err={o[1]:.4f}")
+    _run("fig5_mms_vs_moore", figs.fig5, lambda o: f"tail_vs_8/9_err={o[1]:.4f}")
+    _run("fig6_mms_utilization", figs.fig6, lambda o: f"tail_vs_8/9_err={o[1]:.4f}")
+    _run("fig7_cost_vs_bound", figs.fig7, lambda o: f"bound_violation={o[1]:.4f}")
+    _run("fig8_scalability", figs.fig8, lambda o: f"rows={len(o[0])}")
+    _run("fig9_pn_vs_slimfly", figs.fig9,
+         lambda o: f"demi_pn_worse_than_sf_cases={o[1]:.0f}")
+
+    # fabric planner on a real dry-run profile when available
+    try:
+        from repro.fabric import StepProfile, plan
+        from .roofline import load_records
+        recs = [r for r in load_records() if r.get("status") == "ok"
+                and r.get("shape") == "train_4k"]
+        if recs:
+            rec = max(recs, key=lambda r: r["collective_bytes_per_device"]
+                      .get("total", 0))
+            prof = StepProfile.from_dryrun(rec)
+
+            def _best(rows):
+                # paper's Section-5 rule: cheapest fabric within 5% of the
+                # best step time (all candidates are full-bisection sized)
+                t0 = rows[0]["step_comm_ms"]
+                near = [r for r in rows if r["step_comm_ms"] <= 1.05 * t0]
+                c = min(near, key=lambda r: r["usd_per_node"])
+                return f"best={c['fabric']}@{c['usd_per_node']}$"
+            _run(f"fabric_planner[{rec['arch']}]",
+                 lambda: plan(prof, min_terminals=10000), _best)
+    except Exception as e:  # planner needs dry-run artifacts
+        print(f"fabric_planner,0,unavailable({type(e).__name__})")
+
+    # roofline summary over whatever cells have been dry-run
+    try:
+        from .roofline import roofline_table
+        rows, skipped, errors = roofline_table()
+        n_dom = {}
+        for r in rows:
+            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+        print(f"roofline_summary,0,cells={len(rows)} skipped={len(skipped)} "
+              f"errors={len(errors)} dominant={n_dom}")
+    except Exception as e:
+        print(f"roofline_summary,0,unavailable({type(e).__name__})")
+
+
+if __name__ == "__main__":
+    main()

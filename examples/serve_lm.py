@@ -1,0 +1,64 @@
+"""Batched serving demo: submit a queue of prompts to the Engine and decode
+them with continuous batching; verifies greedy decode matches the
+full-forward argmax for one probe prompt.
+
+Works for any cache family — try --arch mamba2-130m (SSD state cache) or
+--arch h2o-danube-3-4b (sliding-window ring cache).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch smollm-135m --requests 12
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_arch
+from repro.models import build, unbox
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()  # CPU-sized variant of the family
+    bundle = build(cfg)
+    params = unbox(bundle.init(jax.random.key(0)))
+    eng = Engine(cfg, params,
+                 ServeConfig(max_batch=args.max_batch, max_len=128))
+
+    rng = np.random.default_rng(0)
+    rids = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        rids.append((eng.submit(prompt, max_new=args.max_new), prompt))
+
+    t0 = time.perf_counter()
+    results = eng.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    print(f"{args.arch} (reduced family): served {len(results)} requests, "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s on 1 CPU core)")
+
+    # consistency probe: greedy engine output == argmax of the full forward
+    rid, prompt = rids[0]
+    from repro.models.transformer import forward
+    seq = np.concatenate([prompt, np.asarray(results[rid][:-1], np.int32)])
+    logits = forward(cfg, params, jax.numpy.asarray(seq[None]), mode="train")[
+        "logits"]
+    want = np.asarray(jax.numpy.argmax(logits[0, len(prompt) - 1:], -1))
+    got = np.asarray(results[rid], np.int32)
+    match = int((want[: len(got)] == got).sum())
+    print(f"greedy-vs-full-forward agreement on probe: {match}/{len(got)}")
+    assert match >= len(got) - 1, "decode diverged from full forward"
+
+
+if __name__ == "__main__":
+    main()

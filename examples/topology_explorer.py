@@ -1,0 +1,91 @@
+"""Topology explorer: build any of the paper's graphs, measure it exactly,
+and price it with the Section-5 cost model.
+
+Examples:
+  PYTHONPATH=src python examples/topology_explorer.py --topology demi_pn --param 27
+  PYTHONPATH=src python examples/topology_explorer.py --topology mms --param 19
+  PYTHONPATH=src python examples/topology_explorer.py --compare 10000 --radix 48
+"""
+
+import argparse
+
+from repro.core import (DirectNetworkSpec, build_topology, cable_split,
+                        dollars_per_node, electrical_groups, utilization,
+                        watts_per_node)
+from repro.core.moore import min_kbar, moore_bound
+from repro.core.registry import TOPOLOGIES
+from repro.core.select import select_topology
+
+
+def inspect(name: str, param: int, delta0: float | None):
+    g = build_topology(name, param)
+    rep = utilization(g)
+    print(f"{g.name}: N={g.n} |E|={g.num_edges} "
+          f"degree=[{g.degrees.min()},{g.max_degree}]")
+    print(f"  diameter={rep.diameter}  kbar={rep.kbar:.4f}  u={rep.u:.4f}  "
+          f"kbar/u={rep.kbar / rep.u:.4f}")
+    print(f"  Moore bound M(D={g.max_degree}, k={rep.diameter}) = "
+          f"{moore_bound(g.max_degree, rep.diameter)}  (N/M = "
+          f"{g.n / moore_bound(g.max_degree, rep.diameter):.3f})")
+    kb_min = min_kbar(g.max_degree, g.n)
+    print(f"  generalized-Moore minimal kbar for (Delta,N): {kb_min:.4f} "
+          f"(achieved: {rep.kbar:.4f})")
+    leaf = g.meta.get("leaf_mask")
+    n_leaf = int(leaf.sum()) if leaf is not None else g.n
+    if leaf is not None:
+        # indirect network (Section 6, delta=0): Delta0 = (u/kbar)·2Δ_leaf,
+        # every router keeps the same radix, all cables optical
+        leaf_deg = int(g.degrees[leaf].max())
+        d0 = delta0 if delta0 is not None else 2 * leaf_deg * rep.u / rep.kbar
+        ne, no = 0, g.num_edges
+        spec = DirectNetworkSpec(
+            name=g.name, terminals=int(round(n_leaf * d0)),
+            radix=int(g.degrees.max()), routers=g.n, degree=leaf_deg,
+            terminals_per_router=d0, kbar=rep.kbar, u=rep.u,
+            electrical_cables=ne, optical_cables=no, indirect=True)
+    else:
+        d0 = delta0 if delta0 is not None else g.max_degree * rep.u / rep.kbar
+        labels = electrical_groups(g, d0)
+        ne, no = cable_split(g, labels)
+        spec = DirectNetworkSpec(
+            name=g.name, terminals=int(round(n_leaf * d0)),
+            radix=int(round(g.max_degree + d0)), routers=g.n,
+            degree=g.max_degree, terminals_per_router=d0, kbar=rep.kbar,
+            u=rep.u, electrical_cables=ne, optical_cables=no)
+    print(f"  dimensioning: Delta0={d0:.2f} -> T={spec.terminals} "
+          f"R={spec.radix}  cables: {ne} electrical / {no} optical")
+    print(f"  cost model:  {dollars_per_node(spec):8.2f} $/node   "
+          f"{watts_per_node(spec):5.2f} W/node")
+
+
+def compare(terminals: int, radix: int):
+    print(f"feasible topologies for T>={terminals}, R<={radix} "
+          f"(sorted by kbar/u, the paper's cost figure):")
+    print(f"{'family':12s} {'param':>5s} {'T':>8s} {'R':>6s} {'N':>7s} "
+          f"{'kbar':>6s} {'u':>6s} {'kbar/u':>7s}")
+    for r in select_topology(terminals, max_radix=radix)[:12]:
+        print(f"{r.family:12s} {r.param:5d} {r.terminals:8.0f} {r.radix:6.1f} "
+              f"{r.routers:7.0f} {r.kbar:6.3f} {r.u:6.3f} {r.cost_figure:7.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", choices=sorted(TOPOLOGIES), default=None)
+    ap.add_argument("--param", type=int, default=7)
+    ap.add_argument("--delta0", type=float, default=None)
+    ap.add_argument("--compare", type=int, default=None,
+                    help="terminal count to run the Section-5 selector for")
+    ap.add_argument("--radix", type=int, default=48)
+    args = ap.parse_args()
+    if args.topology:
+        inspect(args.topology, args.param, args.delta0)
+    if args.compare:
+        compare(args.compare, args.radix)
+    if not args.topology and not args.compare:
+        inspect("demi_pn", 27, None)   # the paper's 10k-node case
+        print()
+        compare(10_000, 48)
+
+
+if __name__ == "__main__":
+    main()

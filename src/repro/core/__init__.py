@@ -1,0 +1,44 @@
+"""repro.core — the paper's contribution: projective-plane network
+topologies, the generalized-Moore machinery, and the k̄/u cost model."""
+
+from .cost import (
+    CostParams,
+    DirectNetworkSpec,
+    cost_figure,
+    dollars_per_node,
+    max_terminals_per_router,
+    network_summary,
+    watts_per_node,
+)
+from .gf import GF, get_field, is_prime_power, prime_power_decompose
+from .graph import Graph, bfs_distances, distance_distribution
+from .layout import cable_split, electrical_groups, group_sizes
+from .mms import mms_graph
+from .moore import generalized_moore_kbar, kbar_approx, min_kbar, moore_bound, terminals_bound
+from .projective import (
+    demi_pn_graph,
+    incidence_lists,
+    mlfm_graph,
+    num_points,
+    oft_graph,
+    pn_graph,
+    points,
+    self_orthogonal_points,
+    subplane_classes,
+    subplane_line_classes,
+)
+from .reference import (
+    complete_bipartite_graph,
+    complete_graph,
+    dragonfly_graph,
+    hamming_graph,
+    hypercube_graph,
+    paley_graph,
+    random_regular_graph,
+    turan_graph,
+)
+from .registry import TOPOLOGIES, build_topology
+from .select import Realization, all_realizations, realizations_for_family, select_topology
+from .utilization import UtilizationReport, arc_loads, utilization
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,164 @@
+"""Graph container and vectorized analytics used by the cost model.
+
+Everything operates on plain numpy; graphs here model router-level fabrics
+(N up to a few tens of thousands), so dense/CSR numpy is the right tool —
+no JAX needed at this layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["Graph", "bfs_distances", "distance_distribution"]
+
+
+@dataclass
+class Graph:
+    """Undirected simple graph as an edge list + CSR adjacency."""
+
+    n: int
+    edges: np.ndarray  # (E, 2) int64, each undirected edge once, u < v not required
+    name: str = ""
+    meta: dict = field(default_factory=dict)
+
+    indptr: np.ndarray = field(init=False, repr=False)
+    indices: np.ndarray = field(init=False, repr=False)
+    # For directed-arc bookkeeping: arc k is (arc_src[k] -> indices[k]).
+    arc_src: np.ndarray = field(init=False, repr=False)
+    # arc_edge_id[k] = undirected edge id of arc k.
+    arc_edge_id: np.ndarray = field(init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        e = np.asarray(self.edges, dtype=np.int64).reshape(-1, 2)
+        if e.size and (e.min() < 0 or e.max() >= self.n):
+            raise ValueError("edge endpoint out of range")
+        if np.any(e[:, 0] == e[:, 1]):
+            raise ValueError("self-loop")
+        # Dedup undirected edges.
+        key = np.sort(e, axis=1)
+        _, uniq_idx = np.unique(key[:, 0] * self.n + key[:, 1], return_index=True)
+        e = key[np.sort(uniq_idx)]
+        self.edges = e
+        m = e.shape[0]
+        src = np.concatenate([e[:, 0], e[:, 1]])
+        dst = np.concatenate([e[:, 1], e[:, 0]])
+        eid = np.concatenate([np.arange(m), np.arange(m)])
+        order = np.argsort(src, kind="stable")
+        src, dst, eid = src[order], dst[order], eid[order]
+        self.indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(self.indptr, src + 1, 1)
+        self.indptr = np.cumsum(self.indptr)
+        self.indices = dst
+        self.arc_src = src
+        self.arc_edge_id = eid
+
+    # ---- basic invariants ----
+    @property
+    def num_edges(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max()) if self.n else 0
+
+    def is_regular(self) -> bool:
+        d = self.degrees
+        return bool(d.size == 0 or (d == d[0]).all())
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def adjacency_dense(self) -> np.ndarray:
+        a = np.zeros((self.n, self.n), dtype=bool)
+        a[self.edges[:, 0], self.edges[:, 1]] = True
+        a[self.edges[:, 1], self.edges[:, 0]] = True
+        return a
+
+    # ---- distances ----
+    def distances_from(self, source: int) -> np.ndarray:
+        return bfs_distances(self, source)
+
+    def distance_distribution(self, sources=None) -> np.ndarray:
+        return distance_distribution(self, sources)
+
+    def diameter(self, sources=None) -> int:
+        dist = self.distance_distribution(sources)
+        return len(dist) - 1
+
+    def average_distance(self, sources=None) -> float:
+        """Mean distance over ordered pairs of distinct vertices (paper's k̄)."""
+        w = self.distance_distribution(sources).astype(np.float64)
+        total_pairs = w[1:].sum()
+        return float((np.arange(len(w)) * w).sum() / total_pairs)
+
+    def is_connected(self) -> bool:
+        if self.n == 0:
+            return True
+        return bool((bfs_distances(self, 0) >= 0).all())
+
+
+def bfs_distances(g: Graph, source: int) -> np.ndarray:
+    """BFS distances from one source; -1 for unreachable."""
+    dist = np.full(g.n, -1, dtype=np.int64)
+    dist[source] = 0
+    frontier = np.array([source], dtype=np.int64)
+    d = 0
+    while frontier.size:
+        nbrs = _gather_neighbors(g, frontier)
+        nbrs = nbrs[dist[nbrs] < 0]
+        if nbrs.size == 0:
+            break
+        frontier = np.unique(nbrs)
+        d += 1
+        dist[frontier] = d
+    return dist
+
+
+def _gather_neighbors(g: Graph, frontier: np.ndarray) -> np.ndarray:
+    """Concatenate neighbor lists of all frontier vertices, vectorized."""
+    starts = g.indptr[frontier]
+    counts = g.indptr[frontier + 1] - starts
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    # Classic multi-range gather.
+    idx = np.ones(total, dtype=np.int64)
+    cum = np.cumsum(counts)
+    idx[0] = starts[0]
+    idx[cum[:-1]] = starts[1:] - (starts[:-1] + counts[:-1]) + 1
+    idx = np.cumsum(idx)
+    return g.indices[idx]
+
+
+def distance_distribution(g: Graph, sources=None) -> np.ndarray:
+    """W(t): number of ordered (s, t != s) pairs at distance t, averaged over
+    the chosen sources (all vertices by default) so W(t) is 'per vertex' —
+    matching the paper's distance-distribution convention.
+
+    For vertex-transitive graphs a single source gives the exact answer;
+    pass e.g. ``sources=[0]`` to exploit that.
+    """
+    if sources is None:
+        sources = np.arange(g.n)
+    sources = np.asarray(sources, dtype=np.int64)
+    counts: list[np.ndarray] = []
+    maxd = 0
+    acc = np.zeros(1, dtype=np.float64)
+    for s in sources:
+        dist = bfs_distances(g, int(s))
+        if (dist < 0).any():
+            raise ValueError("graph is disconnected")
+        w = np.bincount(dist)
+        if len(w) > len(acc):
+            acc = np.pad(acc, (0, len(w) - len(acc)))
+        acc[: len(w)] += w
+        maxd = max(maxd, len(w) - 1)
+    acc /= len(sources)
+    acc[0] = 1.0
+    return acc[: maxd + 1]

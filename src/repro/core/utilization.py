@@ -1,0 +1,117 @@
+"""Link utilization at saturation under uniform traffic with minimal routing.
+
+This is the paper's central quantitative lever (Section 2 / Theorem 3.9):
+with one unit of traffic per ordered vertex pair, split evenly across all
+shortest paths, each directed arc carries some load; saturation normalizes
+the maximum arc to 1, so
+
+    u = mean(arc load) / max(arc load)
+
+and the serviceable compute nodes per router are Δ0 = Δ·u/k̄ (Eq. 1).
+
+Implemented as a Brandes-style shortest-path DAG accumulation, vectorized
+over arcs per BFS level, optionally restricted to leaf↔leaf traffic for
+indirect networks (Section 6).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .graph import Graph, bfs_distances
+
+__all__ = ["arc_loads", "utilization", "UtilizationReport"]
+
+
+@dataclass
+class UtilizationReport:
+    u: float
+    mean_load: float
+    max_load: float
+    loads: np.ndarray  # per directed arc, normalized so each source sends 1/(#targets)
+    kbar: float  # average distance between (restricted) pairs
+    diameter: int
+
+
+def arc_loads(g: Graph, sources=None, targets_mask: np.ndarray | None = None) -> tuple[np.ndarray, float, int]:
+    """Per-arc load under uniform traffic, plus (k̄, diameter) of the pairs used.
+
+    ``sources`` defaults to every vertex (or every leaf if ``targets_mask``
+    given); traffic flows from each source to every other target vertex,
+    1 unit per ordered pair, split across shortest paths.
+    """
+    n = g.n
+    arc_u = g.arc_src
+    arc_v = g.indices
+    loads = np.zeros(arc_u.shape[0], dtype=np.float64)
+    if targets_mask is None:
+        targets_mask = np.ones(n, dtype=bool)
+    if sources is None:
+        sources = np.nonzero(targets_mask)[0]
+    sources = np.asarray(sources, dtype=np.int64)
+
+    dist_sum = 0.0
+    pair_count = 0
+    diam = 0
+    tmask_f = targets_mask.astype(np.float64)
+    for s in sources:
+        dist = bfs_distances(g, int(s))
+        if (dist < 0).any():
+            raise ValueError("graph is disconnected")
+        lv_u = dist[arc_u]
+        lv_v = dist[arc_v]
+        tree = lv_v == lv_u + 1
+        maxd = int(dist.max())
+        diam = max(diam, int(dist[targets_mask].max()))
+        dist_sum += float(dist[targets_mask].sum())
+        pair_count += int(targets_mask.sum()) - int(targets_mask[s])
+
+        # forward: shortest-path counts
+        sigma = np.zeros(n, dtype=np.float64)
+        sigma[s] = 1.0
+        for lvl in range(1, maxd + 1):
+            m = tree & (lv_v == lvl)
+            np.add.at(sigma, arc_v[m], sigma[arc_u[m]])
+
+        # backward: accumulate traffic (terminal deliveries included)
+        delta = np.zeros(n, dtype=np.float64)
+        for lvl in range(maxd, 0, -1):
+            m = tree & (lv_v == lvl)
+            mv = arc_v[m]
+            coeff = (tmask_f[mv] + delta[mv]) / sigma[mv]
+            c = sigma[arc_u[m]] * coeff
+            loads[m] += c
+            np.add.at(delta, arc_u[m], c)
+
+    kbar = dist_sum / pair_count
+    return loads, kbar, diam
+
+
+def utilization(g: Graph, sources=None, targets_mask: np.ndarray | None = None) -> UtilizationReport:
+    """The paper's u = mean/max arc load at saturation."""
+    if targets_mask is None:
+        targets_mask = g.meta.get("leaf_mask")
+    loads, kbar, diam = arc_loads(g, sources, targets_mask)
+    mx = float(loads.max())
+    mean = float(loads.mean())
+    return UtilizationReport(u=mean / mx, mean_load=mean, max_load=mx,
+                             loads=loads, kbar=kbar, diameter=diam)
+
+
+def valiant_report(g: Graph, sources=None) -> UtilizationReport:
+    """Valiant two-phase randomized routing [paper ref 40]: every packet
+    goes s -> (uniform random intermediate m) -> t via minimal paths.
+
+    By linearity of expectation each phase is exactly one uniform-traffic
+    ensemble, so the expected per-arc load is 2x the minimal-routing load,
+    the load RATIOS (hence u) are unchanged, and the effective path length
+    is 2·k̄ — the paper's point that randomization buys worst-case
+    guarantees for non-uniform traffic at half the uniform throughput
+    (Δ0 ≤ Δ·u/(2k̄) at saturation)."""
+    rep = utilization(g, sources)
+    return UtilizationReport(u=rep.u, mean_load=rep.mean_load * 2.0,
+                             max_load=rep.max_load * 2.0,
+                             loads=rep.loads * 2.0, kbar=2.0 * rep.kbar,
+                             diameter=rep.diameter)

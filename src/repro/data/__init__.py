@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, batch_specs, host_shard_batch, synthetic_batch

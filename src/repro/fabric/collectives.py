@@ -1,0 +1,80 @@
+"""Collective-time estimation on a fabric, grounded in the paper's
+saturation model.
+
+A reduce-scatter / all-gather / all-to-all of uniformly-spread data IS the
+paper's uniform traffic pattern, so its duration at saturation is
+
+    t = bytes_sent_per_node / node_uniform_bw,
+    node_uniform_bw = (Δ · u / k̄) · link_bw / Δ0          (Eq. 1)
+
+— i.e. the k̄/u cost figure directly multiplies collective time.  All-reduce
+is reduce-scatter + all-gather.  A latency term (hops × per-hop latency)
+covers the small-message regime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .model import FabricModel
+
+__all__ = ["CollectiveCost", "collective_time", "allreduce_time",
+           "allgather_time", "alltoall_time"]
+
+PER_HOP_LATENCY_S = 0.5e-6
+
+
+@dataclass
+class CollectiveCost:
+    op: str
+    bytes_per_node: float
+    bandwidth_s: float
+    latency_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.bandwidth_s + self.latency_s
+
+
+def _uniform_time(fabric: FabricModel, sent_per_node: float) -> float:
+    return sent_per_node / fabric.node_uniform_bw
+
+
+def allgather_time(fabric: FabricModel, bytes_global: float, n: int) -> CollectiveCost:
+    """Each node ends with bytes_global; sends its 1/n shard to n-1 peers
+    (uniform destinations)."""
+    sent = bytes_global * (n - 1) / n
+    return CollectiveCost("all-gather", bytes_global / n,
+                          _uniform_time(fabric, sent),
+                          fabric.kbar * PER_HOP_LATENCY_S)
+
+
+def reducescatter_time(fabric: FabricModel, bytes_global: float, n: int) -> CollectiveCost:
+    sent = bytes_global * (n - 1) / n
+    return CollectiveCost("reduce-scatter", bytes_global / n,
+                          _uniform_time(fabric, sent),
+                          fabric.kbar * PER_HOP_LATENCY_S)
+
+
+def allreduce_time(fabric: FabricModel, bytes_global: float, n: int) -> CollectiveCost:
+    rs = reducescatter_time(fabric, bytes_global, n)
+    ag = allgather_time(fabric, bytes_global, n)
+    return CollectiveCost("all-reduce", bytes_global,
+                          rs.bandwidth_s + ag.bandwidth_s,
+                          rs.latency_s + ag.latency_s)
+
+
+def alltoall_time(fabric: FabricModel, bytes_per_node: float, n: int) -> CollectiveCost:
+    """Personalized all-to-all: the exact uniform-traffic pattern."""
+    sent = bytes_per_node * (n - 1) / n
+    return CollectiveCost("all-to-all", bytes_per_node,
+                          _uniform_time(fabric, sent),
+                          fabric.kbar * PER_HOP_LATENCY_S)
+
+
+def collective_time(fabric: FabricModel, op: str, bytes_amount: float,
+                    n: int) -> CollectiveCost:
+    fn = {"all-reduce": allreduce_time, "all-gather": allgather_time,
+          "reduce-scatter": reducescatter_time, "all-to-all": alltoall_time,
+          "collective-permute": alltoall_time}[op]
+    return fn(fabric, bytes_amount, n)

@@ -1,0 +1,91 @@
+"""Fabric models: a physical interconnect = topology graph + link rate +
+terminals per router.  The paper's saturation analysis (Eq. 1: per-node
+injection bandwidth a = Δ·u/k̄ link-equivalents) prices uniform-traffic
+collectives on any fabric; a 3D torus builder covers the TPU-pod reference
+point.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import Graph, utilization
+from ..core.reference import dragonfly_canonical_stats
+
+__all__ = ["FabricModel", "torus3d_graph", "make_fabric"]
+
+
+def torus3d_graph(x: int, y: int, z: int) -> Graph:
+    """3D torus (TPU-pod ICI reference). Wrap links dropped for dims < 3."""
+    n = x * y * z
+    coords = np.stack(np.unravel_index(np.arange(n), (x, y, z)), 1)
+    edges = []
+    for d, size in enumerate((x, y, z)):
+        if size == 1:
+            continue
+        nxt = coords.copy()
+        nxt[:, d] = (nxt[:, d] + 1) % size
+        dst = np.ravel_multi_index((nxt[:, 0], nxt[:, 1], nxt[:, 2]), (x, y, z))
+        mask = np.ones(n, dtype=bool)
+        if size == 2:  # avoid doubled edge on wrap of size-2 dims
+            mask = coords[:, d] == 0
+        edges.append(np.stack([np.arange(n)[mask], dst[mask]], 1))
+    g = Graph(n, np.concatenate(edges), name=f"torus3d({x},{y},{z})")
+    g.meta.update(family="torus3d", dims=(x, y, z))
+    return g
+
+
+@dataclass
+class FabricModel:
+    graph: Graph
+    link_gbps: float = 400.0          # per-link, each direction (50 GB/s)
+    terminals_per_router: float = 1.0
+    kbar: float | None = None
+    u: float | None = None
+    name: str = ""
+
+    def __post_init__(self):
+        if self.kbar is None or self.u is None:
+            if self.graph.meta.get("family") == "dragonfly":
+                # canonical (l-g-l) routing, per the paper's Table 2 convention
+                self.kbar, self.u = dragonfly_canonical_stats(self.graph.meta["h"])
+            else:
+                sources = None
+                if self.graph.n > 3000:  # sample sources for very large graphs
+                    rng = np.random.default_rng(0)
+                    sources = rng.choice(self.graph.n, 256, replace=False)
+                rep = utilization(self.graph, sources=sources)
+                self.kbar, self.u = rep.kbar, rep.u
+        if not self.name:
+            self.name = self.graph.name
+
+    @property
+    def link_bytes_per_s(self) -> float:
+        return self.link_gbps * 1e9 / 8
+
+    @property
+    def injection_links(self) -> float:
+        """Eq. (1): per-ROUTER saturation injection bandwidth under uniform
+        traffic, in link-equivalents: a = Δ·u/k̄."""
+        return self.graph.max_degree * self.u / self.kbar
+
+    @property
+    def node_uniform_bw(self) -> float:
+        """bytes/s each TERMINAL can inject at saturation (uniform traffic)."""
+        return self.injection_links * self.link_bytes_per_s / self.terminals_per_router
+
+
+def make_fabric(kind: str, link_gbps: float = 400.0, **kw) -> FabricModel:
+    from ..core import (build_topology, demi_pn_graph, dragonfly_graph,
+                        hamming_graph, mms_graph, oft_graph, pn_graph)
+    builders = {
+        "demi_pn": demi_pn_graph, "pn": pn_graph, "oft": oft_graph,
+        "mms": mms_graph, "slimfly": mms_graph, "dragonfly": dragonfly_graph,
+        "hamming": hamming_graph, "torus3d": torus3d_graph,
+    }
+    delta0 = kw.pop("terminals_per_router", 1.0)
+    g = builders[kind](*kw.pop("args", ()), **kw)
+    return FabricModel(g, link_gbps=link_gbps, terminals_per_router=delta0,
+                       name=g.name)

@@ -1,0 +1,181 @@
+"""Placement: map logical mesh coordinates (pod, data, model) onto the
+terminals of a physical fabric graph and evaluate per-link load for a
+step's collective schedule.
+
+This closes the loop the paper leaves open: Section 2 prices UNIFORM
+traffic with the closed form u = a·k̄/Δ; a training step's traffic is
+structured (rings over the DP axis, all-to-all inside TP/EP groups), so the
+load actually seen by each link depends on where the job's chips sit.  We
+route the schedule over shortest paths (equal split, the paper's minimal-
+routing model) and report max/mean link load — the placement analogue of
+Theorem 3.9's counting argument.
+
+Strategies:
+  linear  — chips fill routers in index order (what a naive scheduler does)
+  group   — each model-axis group is packed onto consecutive routers
+            (electrical-group-aligned; for PN fabrics this is the subplane
+            partition of Figure 2)
+  random  — seeded shuffle baseline
+plus ``greedy_improve``: pairwise-swap descent on max-link load.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import Graph
+from ..core.graph import bfs_distances
+
+__all__ = ["Placement", "place_mesh", "collective_traffic", "link_loads",
+           "greedy_improve", "evaluate_placements"]
+
+
+@dataclass
+class Placement:
+    """chip -> router assignment for a (pod, data, model)-shaped mesh."""
+    graph: Graph
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    router_of: np.ndarray  # (n_chips,) router index per flattened chip
+
+    @property
+    def n_chips(self) -> int:
+        return int(np.prod(self.mesh_shape))
+
+
+def place_mesh(g: Graph, mesh_shape, axis_names, terminals_per_router: int,
+               strategy: str = "linear", seed: int = 0) -> Placement:
+    n_chips = int(np.prod(mesh_shape))
+    capacity = g.n * terminals_per_router
+    if n_chips > capacity:
+        raise ValueError(f"{n_chips} chips > {capacity} terminals "
+                         f"({g.n} routers x {terminals_per_router})")
+    slots = np.repeat(np.arange(g.n), terminals_per_router)[:n_chips]
+    if strategy == "linear":
+        router_of = slots
+    elif strategy == "random":
+        rng = np.random.default_rng(seed)
+        router_of = rng.permutation(
+            np.repeat(np.arange(g.n), terminals_per_router))[:n_chips]
+    elif strategy == "group":
+        # pack each model-axis group contiguously: chips that talk the most
+        # (TP/EP collectives) share a router/electrical group
+        idx = np.arange(n_chips).reshape(mesh_shape)
+        order = np.moveaxis(idx, axis_names.index("model"), -1).reshape(-1)
+        router_of = np.empty(n_chips, dtype=np.int64)
+        router_of[order] = slots
+    else:
+        raise ValueError(strategy)
+    return Placement(g, tuple(mesh_shape), tuple(axis_names), router_of)
+
+
+def collective_traffic(mesh_shape, axis_names, bytes_by_axis: dict):
+    """Chip-to-chip traffic for one step.
+
+    bytes_by_axis: {axis: (kind, bytes_global)} with kind in
+    {'ring', 'all_to_all'}; 'ring' models all-reduce/all-gather/reduce-
+    scatter (2(n-1)/n of the payload between ring neighbours), 'all_to_all'
+    models MoE dispatch (payload/n between every ordered pair in the group).
+    Returns (src_chip, dst_chip, bytes) arrays.
+    """
+    n_chips = int(np.prod(mesh_shape))
+    coords = np.stack(np.unravel_index(np.arange(n_chips), mesh_shape), 1)
+    srcs, dsts, byts = [], [], []
+    for axis, (kind, payload) in bytes_by_axis.items():
+        ax = axis_names.index(axis)
+        n = mesh_shape[ax]
+        if n == 1:
+            continue
+        nxt = coords.copy()
+        if kind == "ring":
+            nxt[:, ax] = (nxt[:, ax] + 1) % n
+            dst = np.ravel_multi_index(nxt.T, mesh_shape)
+            per = payload * 2.0 * (n - 1) / n
+            srcs.append(np.arange(n_chips)); dsts.append(dst)
+            byts.append(np.full(n_chips, per))
+        elif kind == "all_to_all":
+            for shift in range(1, n):
+                nxt = coords.copy()
+                nxt[:, ax] = (nxt[:, ax] + shift) % n
+                dst = np.ravel_multi_index(nxt.T, mesh_shape)
+                srcs.append(np.arange(n_chips)); dsts.append(dst)
+                byts.append(np.full(n_chips, payload / n))
+        else:
+            raise ValueError(kind)
+    return (np.concatenate(srcs), np.concatenate(dsts), np.concatenate(byts))
+
+
+def link_loads(p: Placement, traffic) -> dict:
+    """Route traffic over shortest paths (equal split over next hops, the
+    minimal-routing model of Section 2) and accumulate per-arc load."""
+    g = p.graph
+    src, dst, byts = traffic
+    rs, rd = p.router_of[src], p.router_of[dst]
+    # aggregate router-to-router demands
+    key = rs * g.n + rd
+    agg = np.zeros(g.n * g.n)
+    np.add.at(agg, key, byts)
+    dist = np.stack([bfs_distances(g, s) for s in range(g.n)])
+    arc_load = np.zeros(len(g.indices))
+    for s in range(g.n):
+        demand = agg[s * g.n: (s + 1) * g.n].copy()
+        demand[s] = 0.0
+        if not demand.any():
+            continue
+        # push flow from s along the shortest-path DAG with equal next-hop
+        # (ECMP-style) split: process nodes far-to-near; down[v] = bytes
+        # that must transit v (own demand + downstream shares)
+        order = np.argsort(dist[s])
+        down = demand.copy()
+        for v in order[::-1]:
+            if v == s or down[v] <= 0:
+                continue
+            lo, hi = g.indptr[v], g.indptr[v + 1]
+            nbrs = g.indices[lo:hi]
+            preds = lo + np.nonzero(dist[s][nbrs] == dist[s][v] - 1)[0]
+            if len(preds) == 0:
+                continue
+            share = down[v] / len(preds)
+            for a in preds:
+                u = g.indices[a]
+                # arc u->v carries `share`; find arc id (u, v)
+                lo_u, hi_u = g.indptr[u], g.indptr[u + 1]
+                arc = lo_u + int(np.nonzero(g.indices[lo_u:hi_u] == v)[0][0])
+                arc_load[arc] += share
+                down[u] += share
+    return {"loads": arc_load, "max": float(arc_load.max(initial=0.0)),
+            "mean": float(arc_load.mean() if len(arc_load) else 0.0)}
+
+
+def greedy_improve(p: Placement, traffic, iters: int = 200,
+                   seed: int = 0) -> tuple[Placement, float]:
+    """Pairwise-swap descent on max link load."""
+    rng = np.random.default_rng(seed)
+    best = p.router_of.copy()
+    best_load = link_loads(p, traffic)["max"]
+    cur = Placement(p.graph, p.mesh_shape, p.axis_names, best)
+    for _ in range(iters):
+        i, j = rng.integers(0, p.n_chips, 2)
+        if cur.router_of[i] == cur.router_of[j]:
+            continue
+        cand = cur.router_of.copy()
+        cand[i], cand[j] = cand[j], cand[i]
+        trial = Placement(p.graph, p.mesh_shape, p.axis_names, cand)
+        m = link_loads(trial, traffic)["max"]
+        if m < best_load:
+            best_load, cur = m, trial
+    return cur, best_load
+
+
+def evaluate_placements(g: Graph, mesh_shape, axis_names, delta0: int,
+                        bytes_by_axis: dict, seed: int = 0) -> dict:
+    """Compare strategies; returns {strategy: {max, mean}}."""
+    traffic = collective_traffic(mesh_shape, axis_names, bytes_by_axis)
+    out = {}
+    for strat in ("linear", "group", "random"):
+        p = place_mesh(g, mesh_shape, axis_names, delta0, strat, seed=seed)
+        r = link_loads(p, traffic)
+        out[strat] = {"max": r["max"], "mean": r["mean"]}
+    return out

@@ -1,0 +1,124 @@
+"""The Section-5 selector, operationalized: given a training job's per-step
+collective profile (straight from the dry-run JSONs) and a chip budget,
+evaluate candidate fabrics on (a) the paper's $-and-Watts model and (b)
+per-step collective time from the saturation model — the full loop from
+'compiled XLA program' to 'which network should the cluster buy'.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import (DirectNetworkSpec, cable_split, dollars_per_node,
+                    electrical_groups, utilization, watts_per_node)
+from ..core.reference import dragonfly_canonical_stats
+from .collectives import collective_time
+from .model import FabricModel, torus3d_graph
+
+__all__ = ["FabricCandidate", "candidate_fabrics", "plan", "StepProfile"]
+
+
+@dataclass
+class StepProfile:
+    """Per-step per-device collective bytes by kind (from the dry-run)."""
+    bytes_by_kind: dict
+    steps_per_run: int = 1
+
+    @classmethod
+    def from_dryrun(cls, record: dict) -> "StepProfile":
+        coll = dict(record.get("collective_bytes_per_device", {}))
+        coll.pop("total", None)
+        return cls(bytes_by_kind=coll)
+
+
+@dataclass
+class FabricCandidate:
+    fabric: FabricModel
+    terminals: int
+    radix: int
+    dollars_per_node: float
+    watts_per_node: float
+
+    def step_comm_seconds(self, profile: StepProfile) -> float:
+        n = self.terminals
+        return sum(collective_time(self.fabric, kind, b, n).total_s
+                   for kind, b in profile.bytes_by_kind.items())
+
+
+def _mk_candidate(g, delta0, name=None) -> FabricCandidate:
+    if g.meta.get("family") == "dragonfly":
+        kbar, u = dragonfly_canonical_stats(g.meta["h"])
+    else:
+        sources = None
+        if g.n > 3000:
+            sources = np.random.default_rng(0).choice(g.n, 256, replace=False)
+        rep = utilization(g, sources=sources)
+        kbar, u = rep.kbar, rep.u
+    fab = FabricModel(g, terminals_per_router=delta0, kbar=kbar, u=u,
+                      name=name or g.name)
+    labels = electrical_groups(g, delta0)
+    ne, no = cable_split(g, labels)
+    leaf = g.meta.get("leaf_mask")
+    n_leaf = int(leaf.sum()) if leaf is not None else g.n
+    spec = DirectNetworkSpec(
+        name=fab.name, terminals=int(round(n_leaf * delta0)),
+        radix=int(round(g.max_degree + delta0)),
+        routers=g.n, degree=g.max_degree, terminals_per_router=delta0,
+        kbar=kbar, u=u, electrical_cables=ne, optical_cables=no)
+    return FabricCandidate(fab, spec.terminals, spec.radix,
+                           dollars_per_node(spec), watts_per_node(spec))
+
+
+def candidate_fabrics(min_terminals: int, max_radix: int = 64):
+    """Instantiate the main families at the smallest size covering the
+    terminal count within the radix budget."""
+    from ..core import (demi_pn_graph, dragonfly_graph, hamming_graph,
+                        mms_graph, pn_graph)
+    from ..core.gf import is_prime_power
+    out = []
+
+    def try_family(builder, params, delta0_of, name):
+        for p in params:
+            try:
+                g = builder(p)
+            except Exception:
+                continue
+            d0 = delta0_of(g)
+            if g.max_degree + d0 > max_radix:
+                continue
+            if g.n * d0 >= min_terminals:
+                out.append(_mk_candidate(g, d0, name=f"{name}({p})"))
+                return
+
+    pps = [q for q in range(3, 80) if is_prime_power(q)]
+    try_family(demi_pn_graph, pps, lambda g: (g.meta["q"] + 1) // 2, "demi-PN")
+    try_family(pn_graph, pps, lambda g: max(1, round(2 * (g.meta["q"] + 1) / 5)), "PN")
+    try_family(mms_graph, [q for q in pps if q % 4 != 2],
+               lambda g: max(1, round(4 / 9 * g.max_degree)), "SF-MMS")
+    try_family(dragonfly_graph, list(range(2, 17)), lambda g: g.meta["h"],
+               "dragonfly")
+    try_family(hamming_graph, list(range(4, 40)), lambda g: g.meta["side"],
+               "Hamming2D")
+    return out
+
+
+def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64):
+    """Rank fabrics by step-communication time and report $/W; returns list
+    of dict rows sorted by comm time."""
+    rows = []
+    for cand in candidate_fabrics(min_terminals, max_radix):
+        t = cand.step_comm_seconds(profile)
+        rows.append({
+            "fabric": cand.fabric.name,
+            "terminals": cand.terminals,
+            "radix": cand.radix,
+            "kbar": round(cand.fabric.kbar, 3),
+            "u": round(cand.fabric.u, 3),
+            "kbar_over_u": round(cand.fabric.kbar / cand.fabric.u, 3),
+            "step_comm_ms": round(t * 1e3, 3),
+            "usd_per_node": round(cand.dollars_per_node, 2),
+            "watts_per_node": round(cand.watts_per_node, 2),
+        })
+    return sorted(rows, key=lambda r: r["step_comm_ms"])

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots of the assigned
+architectures (flash attention, Mamba-2 SSD scan) + jit'd wrappers (ops)
++ pure-jnp oracles (ref).
+
+The paper itself is a network-topology contribution with no kernel-level
+component; these kernels serve the model substrate the framework trains/
+serves on the projective fabrics.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "flash_attention", "ssd_scan"]

@@ -1,0 +1,277 @@
+"""Jit'd production wrappers for the kernel layer.
+
+Each op has (a) the Pallas TPU kernel (the deploy target; validated in
+interpret mode on CPU), and (b) a memory-efficient pure-jnp path with the
+same blocked structure, used for CPU smoke tests AND for the multi-pod AOT
+dry-run (the CPU backend cannot lower Mosaic kernels; the jnp path has the
+same matmul/bytes structure so the roofline terms are representative).
+
+``impl='auto'`` picks pallas on TPU backends, jnp elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+__all__ = ["attention", "ssd", "ssd_decode_step", "rglru", "rglru_decode_step",
+           "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _attention_jnp_blocked(q, k, v, *, causal, window, q_offset, kv_len,
+                           scale, block_q):
+    """Flash-structured jnp attention: scan over query blocks, full-KV
+    online softmax per block — O(block_q · Skv) live logits."""
+    from ..perf import flags
+    pf = flags()
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    block_q = max(1, min(block_q, sq))
+    if sq % block_q:
+        block_q = 1  # odd sizes: degrade gracefully (smoke tests)
+    n_blocks = sq // block_q
+    grouped = pf.gqa_grouped and group > 1
+    # perf: bf16 K/V operands with fp32 MXU accumulation halve the streamed
+    # bytes; the paper-faithful baseline upcasts to fp32 first
+    kv_dtype = k.dtype if (pf.prob_bf16 and k.dtype == jnp.bfloat16) \
+        else jnp.float32
+    kf = k.astype(kv_dtype)
+    vf = v.astype(kv_dtype)
+    if group > 1 and not grouped:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+    kpos = jnp.arange(skv)[None, :]
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len).reshape(b, 1, 1, 1, *(
+            (1,) if grouped else ()))
+
+    qb = q.reshape(b, hq, n_blocks, block_q, d).astype(jnp.float32) * scale
+
+    def one_block(i, qblk):  # qblk: (B, H, block_q, d)
+        if grouped:  # (B, Hkv, G, blk, d) x (B, Hkv, Skv, d): K/V unrepeated
+            qg = qblk.reshape(b, hkv, group, block_q, d)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(kv_dtype), kf,
+                           preferred_element_type=jnp.float32)
+        else:
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk.astype(kv_dtype), kf,
+                           preferred_element_type=jnp.float32)
+        qpos = q_offset + i * block_q + jnp.arange(block_q)[:, None]
+        mask = jnp.ones((block_q, skv), dtype=bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        mask = jnp.broadcast_to(mask, s.shape)
+        if kv_len is not None:
+            mask &= (kpos[None, None] < kl) if not grouped else \
+                (kpos[None, None, None] < kl)
+        s = jnp.where(mask, s, -jnp.inf)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - jnp.maximum(m, -1e30))
+        p = jnp.where(mask, p, 0.0)
+        l = p.sum(axis=-1, keepdims=True)
+        pc = p.astype(kv_dtype) if pf.prob_bf16 else p
+        if grouped:
+            o = jnp.einsum("bhgqk,bhkd->bhgqd", pc, vf,
+                           preferred_element_type=jnp.float32)
+            o = o.reshape(b, hq, block_q, vf.shape[-1])
+            l = l.reshape(b, hq, block_q, 1)
+        else:
+            o = jnp.einsum("bhqk,bhkd->bhqd", pc, vf,
+                           preferred_element_type=jnp.float32)
+        o = o / jnp.where(l == 0, 1.0, l)
+        return o
+
+    # checkpoint each block: the vjp recomputes its (block_q, Skv) logits
+    # instead of saving them — flash-attention memory behaviour in pure jnp.
+    # unroll=True: no while op, so AOT cost_analysis counts every block
+    # (scan bodies are otherwise counted once — see EXPERIMENTS.md §Dry-run).
+    one_block_ckpt = jax.checkpoint(one_block)
+    _, out = jax.lax.scan(
+        lambda _, args: ((), one_block_ckpt(*args)), (),
+        (jnp.arange(n_blocks), jnp.moveaxis(qb, 2, 0)), unroll=True)
+    dv = vf.shape[-1]  # may differ from d (MLA: v_head != qk dim)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq, dv)
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "scale", "impl", "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              q_offset: int = 0, kv_len=None, scale: float | None = None,
+              impl: str = "auto", block_q: int = 1024, block_k: int = 512):
+    """Multi-head GQA attention; see kernels.ref.attention_ref for semantics."""
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "pallas" and kv_len is None:
+        bq = min(block_q, q.shape[2])
+        bk = min(block_k, k.shape[2])
+        if q.shape[2] % bq == 0 and k.shape[2] % bk == 0 and q.shape[3] >= 8:
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale,
+                                   block_q=bq, block_k=bk)
+    if impl == "pallas_interpret" and kv_len is None:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, scale=scale,
+                               block_q=min(block_q, q.shape[2]),
+                               block_k=min(block_k, k.shape[2]), interpret=True)
+    return _attention_jnp_blocked(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, kv_len=kv_len,
+                                  scale=scale, block_q=block_q)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def _ssd_jnp_chunked(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk, state):
+    """Chunked SSD: lax.scan over chunks carrying the (B,H,N,P) state, with
+    each chunk's O(Q^2) intra work checkpointed — one chunk's score matrix
+    live at a time (the jnp mirror of the Pallas kernel's VMEM behaviour)."""
+    bsz, length, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    chunk = min(chunk, length)
+    if length % chunk:
+        chunk = length
+    nc = length // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, g, n)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    if state is None:
+        state = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def per_chunk(s_in, inp):
+        xc, dtc, bc, cc = inp  # (B,Q,H,P), (B,Q,H), (B,Q,G,N), (B,Q,G,N)
+        bh = jnp.repeat(bc, rep, axis=2)  # (B,Q,H,N)
+        ch = jnp.repeat(cc, rep, axis=2)
+        da = dtc * a[None, None, :]                       # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Qi,Qj,H)
+        # mask BEFORE exp: in the non-causal region seg > 0 and exp(seg) can
+        # overflow to inf, which the where() hides in the forward pass but
+        # turns into 0*inf = NaN in its VJP.  exp(-inf) = 0 is safe both ways.
+        seg = jnp.where(causal[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        xdt = xc * dtc[..., None]
+        scores = jnp.einsum("bihn,bjhn->bijh", ch, bh) * decay
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xdt)
+        y += jnp.einsum("bihn,bhnp->bihp", ch, s_in) * jnp.exp(cum)[..., None]
+        w = jnp.exp(cum[:, -1:, :] - cum)                 # (B,Q,H)
+        s_out = s_in * jnp.exp(cum[:, -1, :])[..., None, None] \
+            + jnp.einsum("bjhn,bjhp->bhnp", bh, xdt * w[..., None])
+        return s_out, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    # unroll=True: exact AOT flop accounting (no while op), one chunk's
+    # scores live at a time thanks to the checkpoint
+    final, ys = jax.lax.scan(jax.checkpoint(per_chunk), state, xs, unroll=True)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, length, h, p) \
+        + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int = 256,
+        impl: str = "auto", state=None):
+    """Mamba-2 SSD over a full sequence. Returns (y, final_state)."""
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "pallas" and state is None and x.shape[1] % min(chunk, x.shape[1]) == 0:
+        y = ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk)
+        # final state not produced by the kernel path; recompute cheaply when
+        # needed (prefill uses the jnp path to also return state)
+        _, final = _ssd_jnp_chunked(x, dt, a_log, b_mat, c_mat, d_skip,
+                                    chunk=chunk, state=state)
+        return y, final
+    if impl == "pallas_interpret" and state is None:
+        y = ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip,
+                     chunk=min(chunk, x.shape[1]), interpret=True)
+        _, final = _ssd_jnp_chunked(x, dt, a_log, b_mat, c_mat, d_skip,
+                                    chunk=chunk, state=state)
+        return y, final
+    return _ssd_jnp_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk,
+                            state=state)
+
+
+@jax.jit
+def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """One-token SSD update. state: (B,H,N,P); x_t: (B,H,P); dt_t: (B,H);
+    b_t, c_t: (B,G,N).  Returns (y_t (B,H,P), new_state)."""
+    bsz, h, n, p = state.shape
+    g = b_t.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bt = jnp.repeat(b_t.astype(jnp.float32), rep, axis=1)
+    ct = jnp.repeat(c_t.astype(jnp.float32), rep, axis=1)
+    decay = jnp.exp(dt_t.astype(jnp.float32) * a[None, :])
+    xdt = x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None]
+    new_state = state * decay[..., None, None] + jnp.einsum("bhn,bhp->bhnp", bt, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", ct, new_state) \
+        + x_t.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def rglru(x, a_gate, i_gate, a_param, *, state=None, c: float = 8.0):
+    """RG-LRU over a sequence via associative scan. Returns (y, final_state)."""
+    bsz, length, d = x.shape
+    xf = x.astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, None, :] \
+        * jax.nn.sigmoid(a_gate.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * xf * jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    if state is not None:
+        # fold the carry-in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([state[:, None, :].astype(jnp.float32), b], axis=1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if state is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("c",))
+def rglru_decode_step(state, x_t, a_gate_t, i_gate_t, a_param, *, c: float = 8.0):
+    """One-token RG-LRU update. state, x_t, gates: (B, D)."""
+    xf = x_t.astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, :] \
+        * jax.nn.sigmoid(a_gate_t.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state + mult * xf * jax.nn.sigmoid(i_gate_t.astype(jnp.float32))
+    return h.astype(x_t.dtype), h

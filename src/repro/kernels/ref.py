@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every kernel: the correctness ground truth.
+
+These are deliberately naive (fp32, O(S^2) attention, O(L) sequential SSD
+recurrence) — tests sweep shapes/dtypes and assert the Pallas kernels (in
+interpret mode) and the production jnp paths match these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_ref", "rglru_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0, kv_len=None, scale: float | None = None):
+    """Masked multi-head attention, GQA-aware.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    Query position i sits at global index q_offset + i; key j at j.
+    Masks: causal (global_q >= k), sliding window (k > global_q - window),
+    kv_len (k < kv_len, for padded decode caches).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    mask = jnp.broadcast_to(mask, (b, hq, sq, skv))
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len).reshape(b, 1, 1, 1)
+        mask &= kpos[None, None] < kl
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen with kv_len=0) -> zeros, not NaN
+    probs = jnp.where(mask.any(-1, keepdims=True), probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_log, b_mat, c_mat, d_skip, *, state=None):
+    """Mamba-2 SSD, exact sequential recurrence (the oracle).
+
+    x: (B, L, H, P)   inputs per head
+    dt: (B, L, H)     softplus-activated step sizes (already positive)
+    a_log: (H,)       log(-A) per head (A = -exp(a_log) < 0)
+    b_mat, c_mat: (B, L, G, N) with H % G == 0
+    d_skip: (H,)      skip connection
+    state: optional (B, H, N, P) initial state
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    bsz, length, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2)  # (B, L, H, N)
+    cf = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2)
+    if state is None:
+        state = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * a[None, :])  # (B,H)
+        s = s * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def rglru_ref(x, a_gate, i_gate, a_param, *, state=None, c: float = 8.0):
+    """RG-LRU (RecurrentGemma), exact sequential recurrence.
+
+    x, a_gate, i_gate: (B, L, D) — pre-computed gate pre-activations.
+    a_param: (D,) — the learnable Λ; log_a = -c * softplus(Λ) * sigmoid(a_gate).
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (sigmoid(i_t) ⊙ x_t)
+    Returns (y (B, L, D), final state (B, D)).
+    """
+    bsz, length, d = x.shape
+    xf = x.astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, None, :] \
+        * jax.nn.sigmoid(a_gate.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_x = xf * jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    if state is None:
+        state = jnp.zeros((bsz, d), jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(mult * gated_x, 1, 0))
+    final, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), final

@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh) cell
+with ShapeDtypeStruct stand-ins (no allocation), proving the sharding
+config is coherent, and extract the roofline terms from the compiled
+artifact.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all [--mesh pod1|pod2] [--jobs N]
+
+The FIRST line above sets 512 host placeholder devices BEFORE any jax
+import — do not move it.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..configs.base import ShapeConfig
+from ..models import (DEFAULT_RULES, build, cache_logical_axes, init_model,
+                      resolve_specs, unbox)
+from ..train.train_step import (TrainStepConfig, init_train_state,
+                                make_train_step)
+from .mesh import make_production_mesh
+
+OUT_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "experiments", "dryrun"))
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+\[[^\]]*\]\S*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op, by kind."""
+    out: dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _shard_batch_spec(mesh, batch_dim_size):
+    axes = _batch_axes(mesh)
+    n = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                     for a in axes])) if axes else 1
+    return P(axes) if axes and batch_dim_size % n == 0 else P(None)
+
+
+def _abstract(tree, specs, mesh):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def _lower_any(cfg, shape: ShapeConfig, mesh):
+    from ..models import DEFAULT_RULES
+    from ..perf import flags
+    bundle = build(cfg)
+    if shape.kind == "train":
+        rules = DEFAULT_RULES.replace(ff=None) if flags().replicate_ff \
+            else DEFAULT_RULES
+        ts = TrainStepConfig(zero1=flags().zero1, rules=rules)
+        step_fn, _ = make_train_step(cfg, mesh, ts, donate=False)
+        abstract_state = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.key(0), ts))
+        batch = bundle.input_specs(shape)["batch"]
+        return step_fn.lower(abstract_state, batch)
+    if shape.kind == "prefill":
+        return _lower_prefill(cfg, bundle, shape, mesh)
+    return _lower_decode(cfg, bundle, shape, mesh)
+
+
+def _compile_metrics(cfg, shape, mesh):
+    t0 = time.time()
+    lowered = _lower_any(cfg, shape, mesh)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    return {
+        "compile_seconds": round(compile_s, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "transcendentals": cost.get("transcendentals", 0.0),
+        "collective_bytes_per_device": collective_bytes(text),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "hlo_chars": len(text),
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Compile the cell; correct scan-body undercounting with 1- vs 2-period
+    unrolled probes (XLA cost_analysis counts a while body once, so the
+    corrected totals are main + (reps-1) * (probe2 - probe1))."""
+    from ..models.transformer import layer_plan
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if shape.kind == "decode" and shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(full-attention arch; see DESIGN.md)"}
+
+    with mesh:
+        main = _compile_metrics(cfg, shape, mesh)
+        plan = layer_plan(cfg)
+        probe = None
+        corrected = {k: main[k] for k in ("flops", "bytes_accessed",
+                                          "transcendentals")}
+        corrected["collective_bytes_per_device"] = dict(
+            main["collective_bytes_per_device"])
+        if cfg.scan_layers and plan.reps > 1:
+            p_cfgs = [cfg.replace(n_layers=plan.prefix + k * plan.period,
+                                  scan_layers=False) for k in (1, 2)]
+            p1 = _compile_metrics(p_cfgs[0], shape, mesh)
+            p2 = _compile_metrics(p_cfgs[1], shape, mesh)
+            probe = {"p1": {k: p1[k] for k in corrected if k != "collective_bytes_per_device"},
+                     "p2": {k: p2[k] for k in corrected if k != "collective_bytes_per_device"},
+                     "p1_coll": p1["collective_bytes_per_device"],
+                     "p2_coll": p2["collective_bytes_per_device"]}
+            extra = plan.reps - 1
+            for k in ("flops", "bytes_accessed", "transcendentals"):
+                corrected[k] = main[k] + extra * (p2[k] - p1[k])
+            allk = set(main["collective_bytes_per_device"]) | \
+                set(p1["collective_bytes_per_device"]) | \
+                set(p2["collective_bytes_per_device"])
+            for k in allk:
+                corrected["collective_bytes_per_device"][k] = (
+                    main["collective_bytes_per_device"].get(k, 0.0)
+                    + extra * (p2["collective_bytes_per_device"].get(k, 0.0)
+                               - p1["collective_bytes_per_device"].get(k, 0.0)))
+
+    return {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "perf_flags": os.environ.get("REPRO_PERF", ""),
+        "n_devices": 512 if multi_pod else 256,
+        "scan_reps": plan.reps,
+        **{k: main[k] for k in ("compile_seconds", "memory", "hlo_chars")},
+        "raw": {k: main[k] for k in ("flops", "bytes_accessed",
+                                     "transcendentals",
+                                     "collective_bytes_per_device")},
+        "probe": probe,
+        "flops": corrected["flops"],
+        "bytes_accessed": corrected["bytes_accessed"],
+        "transcendentals": corrected["transcendentals"],
+        "collective_bytes_per_device": corrected["collective_bytes_per_device"],
+    }
+
+
+def _serve_param_args(cfg, bundle, mesh):
+    boxed = jax.eval_shape(lambda k: init_model(cfg, k), jax.random.key(0))
+    specs = bundle.param_specs(mesh)
+    params_abs = jax.tree.map(
+        lambda b, s: jax.ShapeDtypeStruct(b.value.shape, b.value.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        boxed, specs,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    return params_abs
+
+
+def _memory_abstract(cfg, shape, mesh, batch):
+    if cfg.vision is not None:
+        sh = (batch, cfg.vision.n_image_tokens, cfg.d_model)
+    elif cfg.encoder is not None:
+        sh = (batch, max(1, shape.seq_len // cfg.encoder.frame_ratio), cfg.d_model)
+    else:
+        return None
+    return jax.ShapeDtypeStruct(sh, jnp.bfloat16,
+                                sharding=NamedSharding(
+                                    mesh, _shard_batch_spec(mesh, batch)))
+
+
+def _output_shardings(cfg, mesh, logits_shape, cache_shape):
+    """(logits, cache) NamedShardings from logical axes."""
+    lspec = resolve_specs(("batch", None, "vocab"), DEFAULT_RULES, mesh,
+                          tuple(logits_shape.shape))
+    cache_axes = cache_logical_axes(cache_shape)
+    cache_specs = jax.tree.map(
+        lambda l, a: resolve_specs(a, DEFAULT_RULES, mesh, tuple(l.shape)),
+        cache_shape, cache_axes,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))
+    to_ns = lambda s: NamedSharding(mesh, s)
+    return to_ns(lspec), jax.tree.map(to_ns, cache_specs), cache_specs
+
+
+def _lower_prefill(cfg, bundle, shape: ShapeConfig, mesh):
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32,
+                               sharding=NamedSharding(
+                                   mesh, P(*_shard_batch_spec(mesh, b), None)))
+    params_abs = _serve_param_args(cfg, bundle, mesh)
+    mem = _memory_abstract(cfg, shape, mesh, b)
+
+    def prefill(params, tokens, memory):
+        return bundle.prefill(params, tokens, memory=memory, mesh=mesh)
+
+    logits_shape, cache_shape = jax.eval_shape(prefill, params_abs, tok, mem)
+    lsh, csh, _ = _output_shardings(cfg, mesh, logits_shape, cache_shape)
+    return jax.jit(prefill, out_shardings=(lsh, csh)).lower(
+        params_abs, tok, mem)
+
+
+def _lower_decode(cfg, bundle, shape: ShapeConfig, mesh):
+    b = shape.global_batch
+    params_abs = _serve_param_args(cfg, bundle, mesh)
+    mem = _memory_abstract(cfg, shape, mesh, b)
+    bspec = _shard_batch_spec(mesh, b)
+
+    # cache structure: eval_shape of a prefill at the cache's context length
+    ctx = shape.seq_len if cfg.window is None else min(shape.seq_len, cfg.window)
+    def _pf(params, tokens, memory):
+        return bundle.prefill(params, tokens, memory=memory, mesh=None,
+                              cache_slots=ctx)
+    tok_for_cache = jax.ShapeDtypeStruct((b, ctx), jnp.int32)
+    logits_sh, cache_shape = jax.eval_shape(_pf, params_abs, tok_for_cache, mem)
+    lsh, csh, cache_specs = _output_shardings(cfg, mesh, logits_sh, cache_shape)
+    cache_abs = _abstract(cache_shape, cache_specs, mesh)
+
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                               sharding=NamedSharding(mesh, P(*bspec, None)))
+    pos = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                               sharding=NamedSharding(mesh, P(*bspec, None)))
+
+    def decode(params, cache, tokens, positions):
+        return bundle.decode_step(params, cache, tokens, positions, mesh=mesh)
+
+    dec_logits_sh = NamedSharding(mesh, resolve_specs(
+        ("batch", None, "vocab"), DEFAULT_RULES, mesh, (b, 1, cfg.vocab)))
+    return jax.jit(decode, out_shardings=(dec_logits_sh, csh)).lower(
+        params_abs, cache_abs, tok, pos)
+
+
+def cell_path(arch, shape_name, mesh_name):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+
+
+def run_cell(arch, shape_name, multi_pod, force=False):
+    mesh_name = "pod2" if multi_pod else "pod1"
+    path = cell_path(arch, shape_name, mesh_name)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    try:
+        result = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # record failures — they are bugs to fix
+        result = {"status": "error", "arch": arch, "shape": shape_name,
+                  "mesh": mesh_name, "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    result["wall_seconds"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+    ok = err = skip = 0
+    for a, s, mp in cells:
+        r = run_cell(a, s, mp, force=args.force)
+        tag = r["status"]
+        ok += tag == "ok"
+        err += tag == "error"
+        skip += tag == "skipped"
+        msg = r.get("error", "")[:120] if tag == "error" else (
+            f"flops={r.get('flops', 0):.3e} "
+            f"coll={r.get('collective_bytes_per_device', {}).get('total', 0):.3e}B"
+            if tag == "ok" else r.get("reason", ""))
+        print(f"[{tag:7s}] {a:24s} {s:12s} {'pod2' if mp else 'pod1'}  {msg}",
+              flush=True)
+        if tag == "ok":
+            print(f"          memory/device: "
+                  f"args={r['memory']['argument_bytes']/2**30:.2f}GiB "
+                  f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB "
+                  f"compile={r['compile_seconds']}s", flush=True)
+    print(f"done: {ok} ok, {skip} skipped, {err} errors")
+    sys.exit(1 if err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Training launcher: the production entry point around repro.train.Trainer.
+
+On a real cluster each host runs this under `jax.distributed` and the mesh
+is the production (pod, data, model) mesh; on this CPU container it runs
+the same code on the host mesh with a reduced or full config.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 200 --reduced --seq 128 --batch 4
+
+Checkpoints land in --ckpt-dir; re-running resumes exactly (step, data
+order and rng are pure functions of the saved step).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ARCHS, get_arch
+from ..data import DataConfig
+from ..optim import AdamWConfig, cosine_schedule
+from ..train.train_step import TrainStepConfig
+from ..train.trainer import Trainer, TrainerConfig
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the same family")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="error-feedback int8 gradient compression")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16) production mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh(1, 1))
+
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch,
+                      memory_tokens=(cfg.vision.n_image_tokens if cfg.vision
+                                     else 0),
+                      d_model=cfg.d_model)
+    trainer = Trainer(
+        cfg=cfg, data=data, mesh=mesh,
+        tcfg=TrainerConfig(total_steps=args.steps,
+                           checkpoint_every=args.ckpt_every,
+                           checkpoint_dir=args.ckpt_dir, log_every=10),
+        scfg=TrainStepConfig(
+            optimizer=AdamWConfig(lr=cosine_schedule(
+                args.lr, warmup=min(20, args.steps // 10 + 1),
+                total=args.steps)),
+            zero1=args.zero1, grad_compress=args.grad_compress),
+    )
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

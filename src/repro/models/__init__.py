@@ -1,0 +1,13 @@
+"""Model zoo: unified block-based decoder for the 10 assigned archs."""
+
+from .common import (Boxed, box, boxed_specs, logical_specs, resolve_specs,
+                     unbox, DEFAULT_RULES, ShardingRules)
+from .model import ModelBundle, build, cache_logical_axes, loss_fn
+from .transformer import count_params, forward, init_model, layer_plan, model_flops
+
+__all__ = [
+    "Boxed", "box", "boxed_specs", "logical_specs", "resolve_specs", "unbox",
+    "DEFAULT_RULES", "ShardingRules", "ModelBundle", "build",
+    "cache_logical_axes", "loss_fn", "count_params", "forward", "init_model",
+    "layer_plan", "model_flops",
+]

@@ -1,0 +1,192 @@
+"""Shared model machinery: boxed params with logical sharding axes,
+rule-based PartitionSpec resolution, initializers, dtype policy.
+
+Params are pytrees of :class:`Boxed` leaves carrying ``(value, logical
+axes)``; ``unbox`` strips to plain arrays for compute, ``logical_specs`` +
+``resolve_specs`` turn the axes into mesh PartitionSpecs.  This keeps the
+sharding annotation exactly adjacent to the initializer that created the
+weight — the MaxText pattern without the flax dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "Boxed", "box", "unbox", "logical_specs", "resolve_specs", "ShardingRules",
+    "DEFAULT_RULES", "truncated_normal_init", "zeros_init", "scale_init",
+    "Policy", "DEFAULT_POLICY", "with_sharding",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+class Boxed:
+    """A parameter leaf: array + logical axis names (one per dim)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Boxed({shape}, axes={self.axes})"
+
+
+def box(value, axes) -> Boxed:
+    assert len(axes) == value.ndim, (value.shape, axes)
+    return Boxed(value, axes)
+
+
+def _is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Boxed pytree -> plain array pytree."""
+    return jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+
+
+def logical_specs(tree):
+    """Boxed pytree -> pytree of logical-axis tuples."""
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: tuple[tuple[str, Any], ...]
+
+    def lookup(self, name: str | None):
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def replace(self, **kw) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return ShardingRules(tuple(d.items()))
+
+
+DEFAULT_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("fsdp", ("data", "pod")),  # ZeRO-3 weight-shard dims (large models)
+    ("embed", None),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ff", "model"),
+    ("expert", "model"),
+    ("expert_ff", "fsdp_proxy"),  # resolved via the 'fsdp' rule at use site
+    ("seq", None),
+    ("kv_seq", None),
+    ("state", None),
+    ("conv", None),
+))
+
+
+def _mesh_axes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_specs(axes_tree, rules: ShardingRules, mesh: Mesh, shapes_tree=None):
+    """Logical axes pytree -> PartitionSpec pytree, dropping any assignment
+    that does not divide the dimension (e.g. kv_heads=1 on a 16-way model
+    axis falls back to replication)."""
+    sizes = _mesh_axes(mesh)
+
+    def one(axes, shape):
+        spec, used = [], set()
+        for d, name in enumerate(axes):
+            assign = rules.lookup(name)
+            if assign == "fsdp_proxy":
+                assign = rules.lookup("fsdp")
+            ok = None
+            if assign is not None:
+                parts = (assign,) if isinstance(assign, str) else tuple(assign)
+                parts = tuple(p for p in parts if p in sizes and p not in used)
+                total = int(np.prod([sizes[p] for p in parts])) if parts else 1
+                if parts and shape is not None and shape[d] % total == 0:
+                    ok = parts if len(parts) > 1 else parts[0]
+                    used.update(parts)
+                elif parts and shape is None:
+                    ok = parts if len(parts) > 1 else parts[0]
+                    used.update(parts)
+            spec.append(ok)
+        return PartitionSpec(*spec)
+
+    if shapes_tree is None:
+        return jax.tree.map(lambda a: one(a, None), axes_tree,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(e, (str, type(None))) for e in x))
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def boxed_specs(params, rules: ShardingRules, mesh: Mesh):
+    """Boxed pytree (or ShapeDtypeStruct-boxed) -> PartitionSpec pytree."""
+    def one(b: Boxed):
+        return resolve_specs(b.axes, rules, mesh, tuple(b.value.shape))
+    return jax.tree.map(one, params, is_leaf=_is_boxed)
+
+
+def with_sharding(x, spec: PartitionSpec, mesh: Mesh):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---- initializers -----------------------------------------------------------
+
+
+def truncated_normal_init(key, shape, dtype, scale: float | None = None,
+                          fan_in_dims=(0,)):
+    fan_in = int(np.prod([shape[d] for d in fan_in_dims])) or 1
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def zeros_init(key, shape, dtype, **_):
+    return jnp.zeros(shape, dtype)
+
+
+def scale_init(value: float):
+    def init(key, shape, dtype, **_):
+        return jnp.full(shape, value, dtype)
+    return init
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """dtype policy: storage/compute/softmax accumulation."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    accum_dtype: Any = jnp.float32
+
+    def cast_compute(self, tree):
+        return jax.tree.map(
+            lambda x: x.astype(self.compute_dtype)
+            if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating) else x,
+            tree)
+
+
+DEFAULT_POLICY = Policy()

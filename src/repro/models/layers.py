@@ -1,0 +1,323 @@
+"""Neural building blocks: norms, rope, GQA/MLA attention, MLPs.
+
+All blocks follow the same convention: ``init_*`` returns a Boxed pytree
+(weights + logical sharding axes), ``apply_*`` consumes the plain-array
+pytree.  Attention supports train (full causal), prefill (cache write) and
+decode (single position vs. cache, ring-buffer for sliding window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from .common import Boxed, box, truncated_normal_init
+
+__all__ = [
+    "rms_norm", "rope", "init_attention", "apply_attention",
+    "init_mla", "apply_mla", "init_mlp", "apply_mlp",
+    "init_embedding",
+]
+
+
+def _embed_ax(cfg: ArchConfig):
+    return "fsdp" if cfg.fsdp else None
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) * 2.0 / d))
+    pos = jnp.asarray(positions, jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    angles = pos[:, None, :, None] * freqs[None, None, None, :]  # (B,1,S,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ArchConfig, key, cross: bool = False):
+    m, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if cross:
+        hkv = max(1, cfg.n_kv_heads)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e = _embed_ax(cfg)
+    dt = cfg.param_dtype
+    p = {
+        "wq": box(truncated_normal_init(k1, (m, hq, dh), dt), (e, "heads", None)),
+        "wk": box(truncated_normal_init(k2, (m, hkv, dh), dt), (e, "kv_heads", None)),
+        "wv": box(truncated_normal_init(k3, (m, hkv, dh), dt), (e, "kv_heads", None)),
+        "wo": box(truncated_normal_init(k4, (hq, dh, m), dt, fan_in_dims=(0, 1)),
+                  ("heads", None, e)),
+        "norm": box(jnp.ones((m,), dt), (None,)),
+    }
+    if cross:
+        p["gate"] = box(jnp.zeros((), dt), ())
+    return p
+
+
+def batch_axes_for(mesh, bsz: int, model_dim_divisible: bool):
+    """Mesh axes carrying the batch dim.  With the dp_over_model perf flag,
+    blocks whose model-parallel dim does NOT divide the model axis spread
+    batch over it instead of replicating (see perf.PerfFlags)."""
+    from ..perf import flags
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    nb = int(np.prod([sizes[a] for a in batch_axes])) if batch_axes else 1
+    mp = sizes.get("model", 1)
+    if (flags().dp_over_model and not model_dim_divisible and mp > 1
+            and bsz % (nb * mp) == 0):
+        return batch_axes + ("model",)
+    return batch_axes if (batch_axes and bsz % nb == 0) else ()
+
+
+def _constrain_heads(x, mesh):
+    """Pin (B, H, S, D) activations to head-sharding over the model axis.
+    Without this, sequence-parallel residuals let GSPMD resolve the attention
+    einsum by replicating heads across 'model' (observed: 16x activation
+    blow-up on MLA at 128 heads).  Unshardable head counts fall back to
+    replication, or to batch-over-model under the dp_over_model flag."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    heads_ok = "model" in sizes and x.shape[1] % sizes["model"] == 0
+    bspec = batch_axes_for(mesh, x.shape[0], heads_ok) or None
+    hspec = "model" if (heads_ok and "model" not in (bspec or ())) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(bspec, hspec, None, None)))
+
+
+def apply_attention(cfg: ArchConfig, p, x, *, positions, mode: str,
+                    cache=None, memory=None, window=None,
+                    cache_slots: int | None = None, mesh=None,
+                    impl: str = "auto") -> tuple[Any, Any]:
+    """mode: 'train' | 'prefill' | 'decode'.  memory: cross-attn source
+    (B, T, M) — cross layers cache K/V from memory at prefill.
+    Returns (output (B,S,M), new_cache)."""
+    b, s, m = x.shape
+    hq, dh = p["wq"].shape[1], p["wq"].shape[2]
+    hkv = p["wk"].shape[1]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = _constrain_heads(
+        jnp.einsum("bsm,mhd->bhsd", h, p["wq"].astype(h.dtype)), mesh)
+    cross = memory is not None
+
+    if cross:
+        if mode in ("train", "prefill") or cache is None or cache.get("k") is None:
+            hm = memory.astype(h.dtype)
+            k = jnp.einsum("btm,mhd->bhtd", hm, p["wk"].astype(h.dtype))
+            v = jnp.einsum("btm,mhd->bhtd", hm, p["wv"].astype(h.dtype))
+        else:
+            k, v = cache["k"], cache["v"]
+        out = ops.attention(q, k, v, causal=False, impl=impl)
+        new_cache = {"k": k, "v": v} if mode != "train" else None
+    else:
+        k = _constrain_heads(
+            jnp.einsum("bsm,mhd->bhsd", h, p["wk"].astype(h.dtype)), mesh)
+        v = _constrain_heads(
+            jnp.einsum("bsm,mhd->bhsd", h, p["wv"].astype(h.dtype)), mesh)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if mode == "train":
+            out = ops.attention(q, k, v, causal=True, window=window, impl=impl)
+            new_cache = None
+        elif mode == "prefill":
+            out = ops.attention(q, k, v, causal=True, window=window, impl=impl)
+            slots = cache_slots if cache_slots is not None else (
+                min(window, s) if window is not None else s)
+            if slots < s:
+                # ring invariant: position p lives at slot p % slots
+                keep_k = jnp.roll(k[:, :, -slots:], s % slots, axis=2)
+                keep_v = jnp.roll(v[:, :, -slots:], s % slots, axis=2)
+                kpos = jnp.roll(jnp.arange(s - slots, s), s % slots)
+                kpos = jnp.broadcast_to(kpos[None, :], (b, slots)).astype(jnp.int32)
+                new_cache = {"k": keep_k, "v": keep_v, "kpos": kpos}
+            else:
+                pad = slots - s
+                kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                kpos = jnp.concatenate(
+                    [jnp.arange(s), jnp.full((pad,), 2**30)]).astype(jnp.int32)
+                kpos = jnp.broadcast_to(kpos[None, :], (b, slots))
+                new_cache = {"k": kc, "v": vc, "kpos": kpos}
+        else:  # decode: s == 1, write into ring/linear cache
+            ck, cv, kpos = cache["k"], cache["v"], cache["kpos"]
+            slots = ck.shape[2]
+            pos = positions.reshape(b) if hasattr(positions, "reshape") else jnp.full((b,), positions)
+            slot = (pos % slots).astype(jnp.int32)
+            ck = jax.vmap(lambda c, kk, sl: jax.lax.dynamic_update_slice(
+                c, kk, (0, sl, 0)))(ck, k[:, :, 0:1], slot)
+            cv = jax.vmap(lambda c, vv, sl: jax.lax.dynamic_update_slice(
+                c, vv, (0, sl, 0)))(cv, v[:, :, 0:1], slot)
+            kpos = jax.vmap(lambda kp, pp, sl: jax.lax.dynamic_update_slice(
+                kp, pp[None].astype(jnp.int32), (sl,)))(kpos, pos, slot)
+            mask_pos = kpos[:, None, None, :]  # (B,1,1,slots)
+            qpos = pos[:, None, None, None]
+            mask = mask_pos <= qpos
+            if window is not None:
+                mask &= mask_pos > qpos - window
+            logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                                jnp.repeat(ck, hq // hkv, 1).astype(jnp.float32)) * dh**-0.5
+            logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bhqk,bhkd->bhqd",
+                             probs, jnp.repeat(cv, hq // hkv, 1).astype(jnp.float32)).astype(x.dtype)
+            new_cache = {"k": ck, "v": cv, "kpos": kpos}
+
+    y = jnp.einsum("bhsd,hdm->bsm", out, p["wo"].astype(out.dtype))
+    if cross:
+        y = y * jnp.tanh(p["gate"]).astype(y.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ArchConfig, key):
+    mla = cfg.mla
+    m, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    e = _embed_ax(cfg)
+    dt = cfg.param_dtype
+    qk = mla.qk_nope + mla.qk_rope
+    return {
+        "wq_a": box(truncated_normal_init(ks[0], (m, mla.q_lora), dt), (e, None)),
+        "q_norm": box(jnp.ones((mla.q_lora,), dt), (None,)),
+        "wq_b": box(truncated_normal_init(ks[1], (mla.q_lora, h, qk), dt),
+                    (None, "heads", None)),
+        "wkv_a": box(truncated_normal_init(ks[2], (m, mla.kv_lora + mla.qk_rope), dt),
+                     (e, None)),
+        "kv_norm": box(jnp.ones((mla.kv_lora,), dt), (None,)),
+        "wkv_b": box(truncated_normal_init(
+            ks[3], (mla.kv_lora, h, mla.qk_nope + mla.v_head), dt),
+            (None, "heads", None)),
+        "wo": box(truncated_normal_init(ks[4], (h, mla.v_head, m), dt,
+                                        fan_in_dims=(0, 1)), ("heads", None, e)),
+        "norm": box(jnp.ones((m,), dt), (None,)),
+    }
+
+
+def apply_mla(cfg: ArchConfig, p, x, *, positions, mode: str, cache=None,
+              cache_slots: int | None = None, mesh=None, impl: str = "auto"):
+    """MLA with the compressed-KV cache: at serve time only (c_kv, k_rope)
+    per token is cached (kv_lora + qk_rope floats), the MLA memory win."""
+    mla = cfg.mla
+    b, s, m = x.shape
+    h = cfg.n_heads
+    hidden = rms_norm(x, p["norm"], cfg.norm_eps)
+    q_lat = rms_norm(hidden @ p["wq_a"].astype(hidden.dtype), p["q_norm"], cfg.norm_eps)
+    q = _constrain_heads(
+        jnp.einsum("bsl,lhd->bhsd", q_lat, p["wq_b"].astype(hidden.dtype)), mesh)
+    q_nope, q_rope = q[..., :mla.qk_nope], q[..., mla.qk_nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = hidden @ p["wkv_a"].astype(hidden.dtype)  # (B,S,kv_lora+rope)
+    c_kv = rms_norm(kv_a[..., :mla.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = rope(kv_a[..., None, :, mla.kv_lora:],
+                      positions, cfg.rope_theta)  # (B,1,S,rope)
+
+    if mode == "decode" and cache is not None:
+        pos = positions.reshape(b)
+        slot = pos.astype(jnp.int32)
+        ckv = jax.vmap(lambda c, n, sl: jax.lax.dynamic_update_slice(
+            c, n, (sl, 0)))(cache["ckv"], c_kv, slot)
+        krope = jax.vmap(lambda c, n, sl: jax.lax.dynamic_update_slice(
+            c, n, (sl, 0)))(cache["krope"], k_rope_new[:, 0], slot)
+        kv_len = pos + 1
+        new_cache = {"ckv": ckv, "krope": krope}
+        c_use, r_use = ckv, krope[:, None]
+    else:
+        kv_len = None
+        c_use, r_use = c_kv, k_rope_new
+        new_cache = None
+        if mode == "prefill":
+            ckv_c, krope_c = c_kv, k_rope_new[:, 0]
+            if cache_slots is not None and cache_slots > s:
+                pad = cache_slots - s
+                ckv_c = jnp.pad(ckv_c, ((0, 0), (0, pad), (0, 0)))
+                krope_c = jnp.pad(krope_c, ((0, 0), (0, pad), (0, 0)))
+            new_cache = {"ckv": ckv_c, "krope": krope_c}
+
+    kv = _constrain_heads(
+        jnp.einsum("bsl,lhd->bhsd", c_use, p["wkv_b"].astype(hidden.dtype)), mesh)
+    k_nope, v = kv[..., :mla.qk_nope], kv[..., mla.qk_nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_use, (*k_nope.shape[:-1], mla.qk_rope))], -1)
+    qfull = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (mla.qk_nope + mla.qk_rope) ** -0.5
+    if mode == "decode":
+        # causal masking is expressed purely through kv_len (all cached
+        # positions < kv_len are attendable by the single new token)
+        out = ops.attention(qfull, k, v, causal=False,
+                            kv_len=kv_len, scale=scale, impl="jnp")
+    else:
+        out = ops.attention(qfull, k, v, causal=True, scale=scale, impl=impl)
+    y = jnp.einsum("bhsd,hdm->bsm", out, p["wo"].astype(out.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, key, d_ff: int | None = None):
+    m = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    e = _embed_ax(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    p = {"norm": box(jnp.ones((m,), dt), (None,))}
+    if cfg.mlp_act.endswith("_glu"):
+        p["w_gate"] = box(truncated_normal_init(ks[0], (m, f), dt), (e, "ff"))
+        p["w_up"] = box(truncated_normal_init(ks[1], (m, f), dt), (e, "ff"))
+    else:
+        p["w_up"] = box(truncated_normal_init(ks[1], (m, f), dt), (e, "ff"))
+    p["w_down"] = box(truncated_normal_init(ks[2], (f, m), dt), ("ff", e))
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p, x, *, skip_norm: bool = False):
+    h = x if skip_norm else rms_norm(x, p["norm"], cfg.norm_eps)
+    act = {"silu_glu": jax.nn.silu, "gelu_glu": jax.nn.gelu,
+           "gelu": jax.nn.gelu}[cfg.mlp_act]
+    if cfg.mlp_act.endswith("_glu"):
+        hidden = act(h @ p["w_gate"].astype(h.dtype)) * (h @ p["w_up"].astype(h.dtype))
+    else:
+        hidden = act(h @ p["w_up"].astype(h.dtype))
+    return hidden @ p["w_down"].astype(h.dtype)
+
+
+def init_embedding(cfg: ArchConfig, key):
+    dt = cfg.param_dtype
+    e = _embed_ax(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": box(truncated_normal_init(k1, (cfg.vocab, cfg.d_model), dt,
+                                            scale=0.02), ("vocab", e))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = box(truncated_normal_init(k2, (cfg.d_model, cfg.vocab), dt),
+                           (e, "vocab"))
+    return p

@@ -1,0 +1,171 @@
+"""Public model API: build(cfg) -> ModelBundle with init / loss / prefill /
+decode plus spec derivation for the AOT dry-run."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .common import Boxed, boxed_specs, unbox, DEFAULT_RULES, ShardingRules
+from .transformer import count_params, forward, init_model, model_flops
+
+__all__ = ["ModelBundle", "build", "loss_fn", "cache_logical_axes"]
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, mesh=None, impl="auto"):
+    """Next-token cross-entropy (+ MoE aux + MTP). batch: tokens (B,S)
+    [+ memory for vlm/audio]."""
+    tokens = batch["tokens"]
+    out = forward(cfg, params, tokens, mode="train",
+                  memory_inputs=batch.get("memory"), mesh=mesh, impl=impl)
+    logits = out["logits"]
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+
+    def ce(lg, tg, mk):
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        # one-hot contraction instead of take_along_axis: stays sharded over
+        # a vocab-parallel (model-axis) logits layout, no all-gather
+        onehot = (tg[..., None] == jnp.arange(lg.shape[-1])[None, None, :])
+        gold = jnp.sum(lg * onehot.astype(lg.dtype), axis=-1)
+        return (((lse - gold) * mk).sum() / jnp.clip(mk.sum(), 1.0))
+
+    loss = ce(logits, targets, mask)
+    metrics = {"ce": loss, "aux": out["aux"]}
+    loss = loss + out["aux"]
+    if "mtp_logits" in out:
+        t2 = jnp.roll(tokens, -2, axis=1)
+        m2 = jnp.ones_like(tokens, jnp.float32).at[:, -2:].set(0.0)
+        mtp_loss = ce(out["mtp_logits"], t2, m2)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    return loss, metrics
+
+
+def cache_logical_axes(cache_tree):
+    """Assign logical sharding axes to a cache pytree by leaf name/rank.
+
+    Leaves under the scanned ``body`` subtree carry a leading LAYER axis
+    (stacked by lax.scan) before the batch axis; missing that made the
+    batch rule land on the layer dim and the big decode caches resolve to
+    fully-replicated (observed: 464 GiB/device on deepseek decode_32k).
+    """
+    def assign(path, leaf):
+        names = [p.key if hasattr(p, "key") else str(p) for p in path]
+        name = names[-1]
+        nd = len(leaf.shape)
+        if "body" in names:  # strip the stacked layer dim for the name rules
+            nd -= 1
+        if name in ("k", "v"):
+            axes = ("batch", "kv_heads", "kv_seq", None)
+        elif name == "kpos":
+            axes = ("batch", "kv_seq")
+        elif name in ("ckv", "krope"):
+            axes = ("batch", "kv_seq", None)
+        elif name == "conv":
+            axes = ("batch", None, "ff")
+        elif name == "state":
+            axes = ("batch", None, None, None) if nd == 4 else ("batch", "ff")
+        elif name == "enc_memory":
+            axes = ("batch", None, None)
+        else:
+            axes = ("batch",) + (None,) * (nd - 1)
+        assert len(axes) == nd, (names, leaf.shape, axes)
+        if "body" in names:
+            axes = (None,) + axes  # the stacked layer dim is never sharded
+        return axes
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+
+    def init(self, key) -> dict:
+        return init_model(self.cfg, key)
+
+    def abstract_params(self, key=None) -> dict:
+        """Boxed ShapeDtypeStruct params — no allocation (for the dry-run)."""
+        return jax.eval_shape(lambda k: init_model(self.cfg, k),
+                              jax.random.key(0))
+
+    def param_specs(self, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+        boxed = self.abstract_params()
+        return boxed_specs(boxed, rules, mesh)
+
+    def loss(self, params, batch, *, mesh=None, impl="auto"):
+        return loss_fn(self.cfg, params, batch, mesh=mesh, impl=impl)
+
+    def prefill(self, params, tokens, *, memory=None, mesh=None, impl="auto",
+                cache_slots=None):
+        out = forward(self.cfg, params, tokens, mode="prefill",
+                      memory_inputs=memory, mesh=mesh, impl=impl,
+                      cache_slots=cache_slots)
+        return out["logits"], out["cache"]
+
+    def decode_step(self, params, cache, tokens, positions, *, mesh=None,
+                    impl="auto"):
+        out = forward(self.cfg, params, tokens, mode="decode",
+                      positions=positions, cache=cache, mesh=mesh, impl=impl)
+        return out["logits"], out["cache"]
+
+    @staticmethod
+    def concat_caches(caches: list):
+        """Merge per-request caches along each leaf's BATCH axis (leaves
+        under the scanned 'body' subtree carry a leading layer axis, so
+        batch is not always axis 0)."""
+        import jax.tree_util as jtu
+        if len(caches) == 1:
+            return caches[0]
+        axes_tree = cache_logical_axes(caches[0])
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        flat_axes = jtu.tree_flatten(axes_tree, is_leaf=is_axes)[0]
+        treedef = jtu.tree_structure(caches[0])
+        flat = [jtu.tree_flatten(c)[0] for c in caches]
+        merged = [jnp.concatenate(leaves, axis=ax.index("batch"))
+                  for ax, leaves in zip(flat_axes, zip(*flat))]
+        return jtu.tree_unflatten(treedef, merged)
+
+    def num_params(self) -> int:
+        return count_params(self.cfg)
+
+    def num_active_params(self) -> int:
+        return count_params(self.cfg, active_only=True)
+
+    def flops(self, tokens: int, mode: str = "train") -> float:
+        return model_flops(self.cfg, tokens, mode)
+
+    # ---- dry-run inputs -----------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins for one step at the given shape."""
+        cfg = self.cfg
+        b = shape.global_batch
+        tok = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+        extras = {}
+        if cfg.vision is not None:
+            extras["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.encoder is not None:
+            extras["memory"] = jax.ShapeDtypeStruct(
+                (b, max(1, shape.seq_len // cfg.encoder.frame_ratio), cfg.d_model),
+                jnp.bfloat16)
+        if shape.kind == "train":
+            return {"batch": {"tokens": tok, **({"memory": extras["memory"]}
+                                                if extras else {})}}
+        if shape.kind == "prefill":
+            return {"tokens": tok, **({"memory": extras["memory"]} if extras else {})}
+        # decode: one token against a seq_len cache
+        dec_tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        return {"tokens": dec_tok, "positions": pos, **extras}
+
+
+def build(cfg: ArchConfig) -> ModelBundle:
+    return ModelBundle(cfg)

@@ -1,0 +1,89 @@
+"""RecurrentGemma/Griffin recurrent block: linear -> causal conv -> RG-LRU,
+gated by a GeLU branch.  Decode cache = (conv tail, LRU state) — O(1)/token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from .common import box, truncated_normal_init
+from .layers import rms_norm
+
+__all__ = ["init_rglru_block", "apply_rglru_block", "rglru_block_cache_shape"]
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru_block(cfg: ArchConfig, key):
+    m = cfg.d_model
+    w = _width(cfg)
+    dconv = cfg.rglru.d_conv
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    e = "fsdp" if cfg.fsdp else None
+    return {
+        "norm": box(jnp.ones((m,), dt), (None,)),
+        "w_x": box(truncated_normal_init(ks[0], (m, w), dt), (e, "ff")),
+        "w_gate": box(truncated_normal_init(ks[1], (m, w), dt), (e, "ff")),
+        "conv_w": box(truncated_normal_init(ks[2], (dconv, w), dt,
+                                            fan_in_dims=(0,)), ("conv", "ff")),
+        "conv_b": box(jnp.zeros((w,), dt), ("ff",)),
+        "w_a": box(truncated_normal_init(ks[3], (w, w), dt), ("ff", None)),
+        "w_i": box(truncated_normal_init(ks[4], (w, w), dt), ("ff", None)),
+        # init Λ so a ≈ 0.9..0.999 (standard LRU init)
+        "a_param": box(jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w)) / cfg.rglru.c)).astype(dt), ("ff",)),
+        "w_out": box(truncated_normal_init(ks[5], (w, m), dt), ("ff", e)),
+    }
+
+
+def rglru_block_cache_shape(cfg: ArchConfig, batch: int):
+    w = _width(cfg)
+    return {"conv": (batch, cfg.rglru.d_conv - 1, w), "state": (batch, w)}
+
+
+def apply_rglru_block(cfg: ArchConfig, p, x, *, mode: str, cache=None):
+    b, s, m = x.shape
+    w = _width(cfg)
+    c = cfg.rglru.c
+    hidden = rms_norm(x, p["norm"], cfg.norm_eps)
+    xb = hidden @ p["w_x"].astype(hidden.dtype)          # (B,S,W)
+    gate = jax.nn.gelu(hidden @ p["w_gate"].astype(hidden.dtype))
+
+    if mode == "decode":
+        window = jnp.concatenate([cache["conv"], xb], axis=1)  # (B, dconv, W)
+        conv_out = (window.astype(jnp.float32)
+                    * p["conv_w"].astype(jnp.float32)[None]).sum(1) \
+            + p["conv_b"].astype(jnp.float32)
+        xc = conv_out.astype(x.dtype)                    # (B, W)
+        a_gate = xc @ p["w_a"].astype(xc.dtype)
+        i_gate = xc @ p["w_i"].astype(xc.dtype)
+        y_t, state = ops.rglru_decode_step(cache["state"], xc, a_gate, i_gate,
+                                           p["a_param"], c=c)
+        y = y_t[:, None]
+        new_cache = {"conv": window[:, 1:], "state": state}
+    else:
+        k = p["conv_w"].shape[0]
+        xp = jnp.pad(xb, ((0, 0), (k - 1, 0), (0, 0)))
+        conv_out = jax.lax.conv_general_dilated(
+            xp.astype(jnp.float32), p["conv_w"].astype(jnp.float32)[:, None, :],
+            window_strides=(1,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=w)
+        xc = (conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        a_gate = xc @ p["w_a"].astype(xc.dtype)
+        i_gate = xc @ p["w_i"].astype(xc.dtype)
+        state_in = cache["state"] if (cache and "state" in cache) else None
+        y, state = ops.rglru(xc, a_gate, i_gate, p["a_param"], state=state_in, c=c)
+        new_cache = None
+        if mode == "prefill":
+            pad = max(0, k - 1 - s)
+            tail = jnp.pad(xb, ((0, 0), (pad, 0), (0, 0)))[:, -(k - 1):]
+            new_cache = {"conv": tail, "state": state}
+
+    out = (y * gate[:, : y.shape[1]]) @ p["w_out"].astype(y.dtype)
+    return out, new_cache

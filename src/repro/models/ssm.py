@@ -1,0 +1,122 @@
+"""Mamba-2 (SSD) mixer block: in_proj -> causal depthwise conv -> SSD scan
+-> gated RMSNorm -> out_proj.  Train/prefill use the chunked SSD kernel
+path; decode keeps (conv tail, SSD state) as the cache — O(1) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops
+from .common import box, truncated_normal_init
+from .layers import rms_norm
+
+__all__ = ["init_ssd_block", "apply_ssd_block", "ssd_block_cache_shape"]
+
+
+def _dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssd_block(cfg: ArchConfig, key):
+    ssm = cfg.ssm
+    m = cfg.d_model
+    d_inner, h, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * ssm.n_groups * ssm.d_state + h
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    e = "fsdp" if cfg.fsdp else None
+    return {
+        "norm": box(jnp.ones((m,), dt), (None,)),
+        "in_proj": box(truncated_normal_init(ks[0], (m, d_in_proj), dt), (e, "ff")),
+        "conv_w": box(truncated_normal_init(ks[1], (ssm.d_conv, conv_dim), dt,
+                                            fan_in_dims=(0,)), ("conv", "ff")),
+        "conv_b": box(jnp.zeros((conv_dim,), dt), ("ff",)),
+        "a_log": box(jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dt), (None,)),
+        "dt_bias": box(jnp.zeros((h,), dt), (None,)),
+        "d_skip": box(jnp.ones((h,), dt), (None,)),
+        "gate_norm": box(jnp.ones((d_inner,), dt), ("ff",)),
+        "out_proj": box(truncated_normal_init(ks[2], (d_inner, m), dt), ("ff", e)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C) depthwise; left-padded causal."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_block_cache_shape(cfg: ArchConfig, batch: int):
+    ssm = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    return {
+        "conv": (batch, ssm.d_conv - 1, conv_dim),
+        "state": (batch, h, ssm.d_state, ssm.head_dim),
+    }
+
+
+def apply_ssd_block(cfg: ArchConfig, p, x, *, mode: str, cache=None,
+                    impl: str = "auto"):
+    ssm = cfg.ssm
+    b, s, m = x.shape
+    d_inner, h, conv_dim = _dims(cfg)
+    gn = ssm.n_groups * ssm.d_state
+    hidden = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = hidden @ p["in_proj"].astype(hidden.dtype)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    if mode == "decode":
+        conv_tail = cache["conv"]  # (B, d_conv-1, conv_dim)
+        window = jnp.concatenate([conv_tail, xbc], axis=1)  # (B, d_conv, C)
+        conv_out = (window.astype(jnp.float32)
+                    * p["conv_w"].astype(jnp.float32)[None]).sum(1) \
+            + p["conv_b"].astype(jnp.float32)
+        xbc_act = jax.nn.silu(conv_out).astype(x.dtype)[:, None]  # (B,1,C)
+        new_conv = window[:, 1:]
+    else:
+        xbc_act = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"])
+                              .astype(jnp.float32)).astype(x.dtype)
+        new_conv = None
+        if mode == "prefill":
+            pad = max(0, ssm.d_conv - 1 - s)
+            tail = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))[:, -(ssm.d_conv - 1):]
+            new_conv = tail
+
+    xs, bmat, cmat = jnp.split(xbc_act, [d_inner, d_inner + gn], axis=-1)
+    xs = xs.reshape(b, -1, h, ssm.head_dim)
+    bmat = bmat.reshape(b, -1, ssm.n_groups, ssm.d_state)
+    cmat = cmat.reshape(b, -1, ssm.n_groups, ssm.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if mode == "decode":
+        y_t, new_state = ops.ssd_decode_step(
+            cache["state"], xs[:, 0], dt[:, 0], p["a_log"], bmat[:, 0],
+            cmat[:, 0], p["d_skip"])
+        y = y_t[:, None]
+        new_cache = {"conv": new_conv, "state": new_state}
+    else:
+        from ..perf import flags
+        state_in = cache["state"] if (cache and "state" in cache) else None
+        y, final_state = ops.ssd(xs, dt, p["a_log"], bmat, cmat, p["d_skip"],
+                                 chunk=flags().ssd_chunk or ssm.chunk,
+                                 impl=impl, state=state_in)
+        new_cache = ({"conv": new_conv, "state": final_state}
+                     if mode == "prefill" else None)
+
+    y = y.reshape(b, -1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(y.dtype), new_cache

@@ -1,0 +1,455 @@
+"""The unified block-based decoder covering all 10 assigned architectures.
+
+A model is a sequence of blocks; each block has a mixer (attention / MLA /
+SSD / RG-LRU / cross-attention) and optionally an MLP or MoE.  Layers are
+grouped into (prefix | scanned periodic body | suffix) so a 61-layer
+DeepSeek or 100-layer VLM lowers to O(1) HLO via jax.lax.scan with
+per-block remat.
+
+Three entry points share the block machinery:
+  forward(..., mode='train')    -> logits (+ aux losses)
+  forward(..., mode='prefill')  -> logits + cache
+  forward(..., mode='decode')   -> next-token logits + updated cache
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .common import Boxed, box, unbox, truncated_normal_init
+from .layers import (apply_attention, apply_mla, apply_mlp, init_attention,
+                     init_embedding, init_mla, init_mlp, rms_norm)
+from .moe import apply_moe, init_moe
+from .rglru import apply_rglru_block, init_rglru_block
+from .ssm import apply_ssd_block, init_ssd_block
+
+__all__ = ["layer_plan", "init_model", "forward", "model_flops"]
+
+
+# ---------------------------------------------------------------------------
+# Layer plan: (prefix, body period x reps, suffix)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    kinds: tuple[str, ...]          # per-layer block kind
+    has_moe: tuple[bool, ...]       # per-layer MoE flag
+    prefix: int                     # unrolled leading layers
+    period: int                     # scanned super-layer length
+    reps: int                       # scan length
+    suffix: int                     # unrolled trailing layers
+
+
+def layer_plan(cfg: ArchConfig) -> LayerPlan:
+    kinds = []
+    for i in range(cfg.n_layers):
+        k = cfg.pattern[i % len(cfg.pattern)]
+        if k == "attn" and cfg.encoder is not None:
+            k = "dec_xattn"  # enc-dec decoders: self + cross + mlp
+        kinds.append(k)
+    moe_flags = []
+    for i in range(cfg.n_layers):
+        moe_flags.append(cfg.moe is not None and i >= cfg.moe.first_dense
+                         and kinds[i] in ("attn", "dec_xattn", "xattn"))
+    prefix = cfg.moe.first_dense if cfg.moe else 0
+    period = len(cfg.pattern)
+    if not cfg.scan_layers:
+        return LayerPlan(tuple(kinds), tuple(moe_flags), cfg.n_layers, period, 0, 0)
+    reps = (cfg.n_layers - prefix) // period
+    suffix = cfg.n_layers - prefix - reps * period
+    return LayerPlan(tuple(kinds), tuple(moe_flags), prefix, period, reps, suffix)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, kind: str, use_moe: bool, key):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    if kind == "attn":
+        p["mixer"] = (init_mla(cfg, ks[0]) if cfg.mla is not None
+                      else init_attention(cfg, ks[0]))
+    elif kind == "xattn":
+        p["mixer"] = init_attention(cfg, ks[0], cross=True)
+    elif kind == "dec_xattn":
+        p["mixer"] = init_attention(cfg, ks[0])
+        p["cross"] = init_attention(cfg, ks[1], cross=True)
+    elif kind == "ssd":
+        p["mixer"] = init_ssd_block(cfg, ks[0])
+    elif kind == "rglru":
+        p["mixer"] = init_rglru_block(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if kind != "ssd" and cfg.d_ff + (cfg.moe.d_ff_expert if cfg.moe else 0) > 0:
+        p["mlp"] = init_moe(cfg, ks[2]) if use_moe else init_mlp(cfg, ks[2])
+    return p
+
+
+def _stack_boxed(trees):
+    """Stack a list of Boxed pytrees along a new leading (layer) axis."""
+    def stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Boxed(vals, (None,) + leaves[0].axes)
+    return jax.tree.map(stack, *trees, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def init_model(cfg: ArchConfig, key) -> dict:
+    plan = layer_plan(cfg)
+    k_embed, k_layers, k_extra = jax.random.split(key, 3)
+    params: dict[str, Any] = init_embedding(cfg, k_embed)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    params["prefix"] = [
+        _init_block(cfg, plan.kinds[i], plan.has_moe[i], layer_keys[i])
+        for i in range(plan.prefix)]
+    body = []
+    for r in range(plan.reps):
+        base = plan.prefix + r * plan.period
+        super_layer = {
+            f"pos{j}": _init_block(cfg, plan.kinds[base + j],
+                                   plan.has_moe[base + j], layer_keys[base + j])
+            for j in range(plan.period)}
+        body.append(super_layer)
+    params["body"] = _stack_boxed(body) if body else {}
+    tail_base = plan.prefix + plan.reps * plan.period
+    params["suffix"] = [
+        _init_block(cfg, plan.kinds[tail_base + i], plan.has_moe[tail_base + i],
+                    layer_keys[tail_base + i])
+        for i in range(plan.suffix)]
+    params["final_norm"] = box(jnp.ones((cfg.d_model,), jnp.float32), (None,))
+
+    ke = jax.random.split(k_extra, 4)
+    if cfg.encoder is not None:
+        enc_cfg = cfg.replace(pattern=("attn",), moe=None, mla=None,
+                              encoder=None, n_layers=cfg.encoder.n_layers)
+        enc_keys = jax.random.split(ke[0], cfg.encoder.n_layers)
+        enc_body = [{f"pos0": _init_block(enc_cfg, "attn", False, enc_keys[i])}
+                    for i in range(cfg.encoder.n_layers)]
+        params["encoder"] = {
+            "body": _stack_boxed(enc_body),
+            "adapter": box(truncated_normal_init(
+                ke[1], (cfg.d_model, cfg.d_model), jnp.float32), (None, None)),
+            "final_norm": box(jnp.ones((cfg.d_model,), jnp.float32), (None,)),
+        }
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": box(truncated_normal_init(
+                ke[2], (2 * cfg.d_model, cfg.d_model), jnp.float32),
+                (None, None)),
+            "block": _init_block(cfg.replace(moe=None), "attn", False, ke[3]),
+            "norm": box(jnp.ones((cfg.d_model,), jnp.float32), (None,)),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ArchConfig, kind: str, use_moe: bool, p, h, *,
+                 mode, positions, cache, memory, mesh, impl, cache_slots):
+    new_cache: dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.window
+    if kind == "attn":
+        if cfg.mla is not None:
+            out, c = apply_mla(cfg, p["mixer"], h, positions=positions,
+                               mode=mode, cache=(cache or {}).get("mixer"),
+                               cache_slots=cache_slots, mesh=mesh, impl=impl)
+        else:
+            out, c = apply_attention(cfg, p["mixer"], h, positions=positions,
+                                     mode=mode, cache=(cache or {}).get("mixer"),
+                                     window=window, cache_slots=cache_slots,
+                                     mesh=mesh, impl=impl)
+        h = h + out
+        new_cache["mixer"] = c
+    elif kind == "xattn":
+        out, c = apply_attention(cfg, p["mixer"], h, positions=positions,
+                                 mode=mode, cache=(cache or {}).get("mixer"),
+                                 memory=memory, mesh=mesh, impl=impl)
+        h = h + out
+        new_cache["mixer"] = c
+    elif kind == "dec_xattn":
+        out, c = apply_attention(cfg, p["mixer"], h, positions=positions,
+                                 mode=mode, cache=(cache or {}).get("mixer"),
+                                 cache_slots=cache_slots, mesh=mesh, impl=impl)
+        h = h + out
+        new_cache["mixer"] = c
+        out, c = apply_attention(cfg, p["cross"], h, positions=positions,
+                                 mode=mode, cache=(cache or {}).get("cross"),
+                                 memory=memory, mesh=mesh, impl=impl)
+        h = h + out
+        new_cache["cross"] = c
+    elif kind == "ssd":
+        out, c = apply_ssd_block(cfg, p["mixer"], h, mode=mode,
+                                 cache=(cache or {}).get("mixer"), impl=impl)
+        h = h + out
+        new_cache["mixer"] = c
+    elif kind == "rglru":
+        out, c = apply_rglru_block(cfg, p["mixer"], h, mode=mode,
+                                   cache=(cache or {}).get("mixer"))
+        h = h + out
+        new_cache["mixer"] = c
+    else:
+        raise ValueError(kind)
+
+    if "mlp" in p:
+        if use_moe:
+            out, a = apply_moe(cfg, p["mlp"], h, mesh=mesh, impl="auto")
+            aux = aux + a
+        else:
+            out = apply_mlp(cfg, p["mlp"], h)
+        h = h + out
+    if mesh is not None:
+        from .layers import batch_axes_for
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        mp = sizes.get("model", 1)
+        if kind == "ssd":
+            div = ((cfg.ssm.expand * cfg.d_model) // cfg.ssm.head_dim) % mp == 0
+        elif kind == "rglru":
+            div = (cfg.rglru.lru_width or cfg.d_model) % mp == 0
+        else:
+            div = cfg.n_heads % mp == 0
+        batch_axes = batch_axes_for(mesh, h.shape[0], div)
+        if batch_axes:
+            # Megatron-SP: between attention/MoE blocks the residual stream is
+            # also sharded over 'model' along sequence — the remat-saved h per
+            # layer shrinks by the TP degree; GSPMD inserts the all-gather /
+            # reduce-scatter pair at the block entry/exit.  Sequential mixers
+            # (ssd/rglru) keep a batch-only layout.
+            seq_ax = None
+            if (cfg.seq_shard and mode == "train" and kind in
+                    ("attn", "xattn", "dec_xattn") and "model" in sizes
+                    and "model" not in batch_axes
+                    and h.shape[1] % sizes["model"] == 0):
+                seq_ax = "model"
+            h = jax.lax.with_sharding_constraint(
+                h, jax.sharding.NamedSharding(mesh, P(batch_axes, seq_ax, None)))
+    return h, (new_cache or None), aux
+
+
+def _constrain_logits(cfg: ArchConfig, logits, mesh):
+    """Vocab-parallel logits (Megatron-style): keeps the (B,S,V) fp32
+    tensor sharded over the model axis; the CE runs sharded with psum'd
+    logsumexp instead of materializing V per device."""
+    if mesh is None:
+        return logits
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = int(np.prod([sizes[a] for a in batch_axes])) if batch_axes else 1
+    spec_b = batch_axes if (batch_axes and logits.shape[0] % nb == 0) else None
+    spec_v = "model" if ("model" in sizes
+                         and logits.shape[-1] % sizes["model"] == 0) else None
+    return jax.lax.with_sharding_constraint(
+        logits, jax.sharding.NamedSharding(mesh, P(spec_b, None, spec_v)))
+
+
+def _run_encoder(cfg: ArchConfig, params, frames, mesh, impl):
+    """Bidirectional encoder over stub frame embeddings (B, Sf, M)."""
+    enc_cfg = cfg.replace(pattern=("attn",), moe=None, mla=None, encoder=None,
+                          n_layers=cfg.encoder.n_layers)
+    h = frames @ params["adapter"].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, layer_p):
+        blk = layer_p["pos0"]
+        hn = rms_norm(h, blk["mixer"]["norm"], enc_cfg.norm_eps)
+        q = jnp.einsum("bsm,mhd->bhsd", hn, blk["mixer"]["wq"].astype(h.dtype))
+        k = jnp.einsum("bsm,mhd->bhsd", hn, blk["mixer"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsm,mhd->bhsd", hn, blk["mixer"]["wv"].astype(h.dtype))
+        from ..kernels import ops
+        o = ops.attention(q, k, v, causal=False, impl=impl)
+        h = h + jnp.einsum("bhsd,hdm->bsm", o, blk["mixer"]["wo"].astype(h.dtype))
+        h = h + apply_mlp(enc_cfg, blk["mlp"], h)
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(fn, h, params["body"])
+    else:  # unrolled (exact AOT accounting; used by small archs + probes)
+        for i in range(cfg.encoder.n_layers):
+            h, _ = fn(h, jax.tree.map(lambda a: a[i], params["body"]))
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, mode: str = "train",
+            positions=None, cache=None, memory_inputs=None,
+            mesh: Mesh | None = None, impl: str = "auto",
+            cache_slots: int | None = None):
+    """tokens: (B, S) int32.  memory_inputs: image/frame embeddings for
+    vlm/audio archs.  Returns dict(logits=..., cache=..., aux=..., mtp_logits=...).
+    """
+    plan = layer_plan(cfg)
+    b, s = tokens.shape
+    embed = params["embed"]
+    h = jnp.take(embed, tokens, axis=0).astype(jnp.bfloat16)
+    if positions is None:
+        positions = jnp.arange(s)
+
+    memory = None
+    if cfg.encoder is not None:
+        if mode == "decode" and cache is not None and "enc_memory" in cache:
+            memory = cache["enc_memory"]
+        else:
+            memory = _run_encoder(cfg, params["encoder"],
+                                  memory_inputs.astype(jnp.bfloat16), mesh, impl)
+    elif cfg.vision is not None:
+        if mode == "decode" and cache is not None and "enc_memory" in cache:
+            memory = cache["enc_memory"]
+        else:
+            memory = memory_inputs.astype(jnp.bfloat16) if memory_inputs is not None else None
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+
+    # prefix
+    pc = []
+    for i in range(plan.prefix):
+        c_in = cache["prefix"][i] if cache else None
+        h, c, a = _apply_block(cfg, plan.kinds[i], plan.has_moe[i],
+                               params["prefix"][i], h, mode=mode,
+                               positions=positions, cache=c_in, memory=memory,
+                               mesh=mesh, impl=impl, cache_slots=cache_slots)
+        aux_total += a
+        pc.append(c)
+    new_cache["prefix"] = pc
+
+    # scanned body
+    if plan.reps:
+        def body_fn(carry, xs):
+            h, aux = carry
+            layer_p, c_in = xs
+            cs = {}
+            for j in range(plan.period):
+                kind = plan.kinds[plan.prefix + j]
+                moe_f = plan.has_moe[plan.prefix + j]
+                h, c, a = _apply_block(cfg, kind, moe_f, layer_p[f"pos{j}"], h,
+                                       mode=mode, positions=positions,
+                                       cache=(c_in or {}).get(f"pos{j}"),
+                                       memory=memory, mesh=mesh, impl=impl,
+                                       cache_slots=cache_slots)
+                aux = aux + a
+                cs[f"pos{j}"] = c
+            return (h, aux), cs
+
+        fn = jax.checkpoint(body_fn) if cfg.remat else body_fn
+        body_cache_in = cache["body"] if cache else None
+        if body_cache_in is None:
+            # build a None-structured xs: scan needs matching pytrees, so
+            # pass an empty dict tree when no cache flows in
+            xs = (params["body"], {f"pos{j}": None for j in range(plan.period)})
+        else:
+            xs = (params["body"], body_cache_in)
+        (h, aux_total), body_cache_out = jax.lax.scan(fn, (h, aux_total), xs)
+        new_cache["body"] = body_cache_out
+
+    # suffix
+    sc = []
+    base = plan.prefix + plan.reps * plan.period
+    for i in range(plan.suffix):
+        c_in = cache["suffix"][i] if cache else None
+        h, c, a = _apply_block(cfg, plan.kinds[base + i], plan.has_moe[base + i],
+                               params["suffix"][i], h, mode=mode,
+                               positions=positions, cache=c_in, memory=memory,
+                               mesh=mesh, impl=impl, cache_slots=cache_slots)
+        aux_total += a
+        sc.append(c)
+    new_cache["suffix"] = sc
+
+    hf = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (hf @ head.astype(hf.dtype)).astype(jnp.float32)
+    logits = _constrain_logits(cfg, logits, mesh)
+
+    out = {"logits": logits, "aux": aux_total}
+    if mode in ("prefill", "decode"):
+        if memory is not None:
+            new_cache["enc_memory"] = memory
+        out["cache"] = new_cache
+
+    if cfg.mtp and mode == "train":
+        mtp = params["mtp"]
+        shifted = jnp.roll(tokens, -1, axis=1)
+        emb_next = jnp.take(embed, shifted, axis=0).astype(hf.dtype)
+        mtp_in = jnp.concatenate(
+            [rms_norm(h, mtp["norm"], cfg.norm_eps), emb_next], axis=-1) \
+            @ mtp["proj"].astype(hf.dtype)
+        mtp_h, _, _ = _apply_block(cfg.replace(moe=None), "attn", False,
+                                   mtp["block"], mtp_in, mode="train",
+                                   positions=positions, cache=None, memory=None,
+                                   mesh=mesh, impl=impl, cache_slots=None)
+        mtp_hf = rms_norm(mtp_h, params["final_norm"], cfg.norm_eps)
+        out["mtp_logits"] = (mtp_hf @ head.astype(mtp_hf.dtype)).astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (6·N·D dense / 6·N_active·D MoE) for §Roofline
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Parameter count from config algebra (no allocation)."""
+    m, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    plan = layer_plan(cfg)
+    total = v * m + (0 if cfg.tie_embeddings else m * v)
+    for i, kind in enumerate(plan.kinds):
+        if kind in ("attn", "dec_xattn"):
+            if cfg.mla is not None:
+                mla = cfg.mla
+                qk = mla.qk_nope + mla.qk_rope
+                total += (m * mla.q_lora + mla.q_lora * h * qk
+                          + m * (mla.kv_lora + mla.qk_rope)
+                          + mla.kv_lora * h * (mla.qk_nope + mla.v_head)
+                          + h * mla.v_head * m)
+            else:
+                total += m * h * dh + 2 * m * hkv * dh + h * dh * m
+            if kind == "dec_xattn":
+                total += m * h * dh + 2 * m * hkv * dh + h * dh * m
+        elif kind == "xattn":
+            total += m * h * dh + 2 * m * hkv * dh + h * dh * m
+        elif kind == "ssd":
+            ssm = cfg.ssm
+            d_inner = ssm.expand * m
+            gn = ssm.n_groups * ssm.d_state
+            nh = d_inner // ssm.head_dim
+            total += m * (2 * d_inner + 2 * gn + nh) + d_inner * m
+        elif kind == "rglru":
+            w = cfg.rglru.lru_width or m
+            total += 2 * m * w + 2 * w * w + w * m
+        if plan.has_moe[i]:
+            moe = cfg.moe
+            n_e = (moe.top_k if active_only else moe.n_experts)
+            total += 3 * moe.d_ff_expert * m * n_e + m * moe.n_experts
+            total += 3 * moe.d_ff_expert * moe.n_shared * m
+        elif kind in ("attn", "xattn", "dec_xattn") and f > 0:
+            mult = 3 if cfg.mlp_act.endswith("_glu") else 2
+            total += mult * m * f
+        elif kind == "rglru" and f > 0:
+            mult = 3 if cfg.mlp_act.endswith("_glu") else 2
+            total += mult * m * f
+    if cfg.encoder is not None:
+        mult = 3 if cfg.mlp_act.endswith("_glu") else 2
+        total += cfg.encoder.n_layers * (m * h * dh + 2 * m * hkv * dh
+                                         + h * dh * m + mult * m * f)
+    return int(total)
+
+
+def model_flops(cfg: ArchConfig, tokens: int, mode: str = "train") -> float:
+    """MODEL_FLOPS = 6·N_active·D for train, 2·N_active·D for inference."""
+    n_active = count_params(cfg, active_only=True)
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_active * tokens

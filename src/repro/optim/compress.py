@@ -1,0 +1,59 @@
+"""Error-feedback gradient compression (a distributed-optimization trick).
+
+int8 block-quantized gradients with a persistent error accumulator: the
+quantization residual is fed back into the next step's gradient, which keeps
+SGD/Adam convergence (Karimireddy et al.-style EF).  Used as an optional
+stage before the gradient all-reduce to cut DP collective bytes 4x
+(fp32->int8) / 2x (bf16->int8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_init", "compress", "decompress", "ef_compress_grads"]
+
+BLOCK = 256
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def compress(g):
+    """fp grad -> (int8 codes, per-block fp32 scales, pad)."""
+    flat, pad = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return codes, scale, pad
+
+
+def decompress(codes, scale, pad, shape):
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def ef_compress_grads(grads, errors):
+    """Apply error feedback + quantize round-trip to a grad pytree.
+    Returns (compressed-then-decompressed grads, new error accumulators).
+    In a multi-host deployment the int8 codes are what crosses the wire."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        codes, scale, pad = compress(corrected)
+        approx = decompress(codes, scale, pad, g.shape)
+        return approx.astype(g.dtype), corrected - approx
+    out = jax.tree.map(one, grads, errors)
+    g_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    e_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g_new, e_new

@@ -1,0 +1,101 @@
+"""Performance-experiment flags (§Perf hillclimbing).
+
+Every optimization is gated so the paper-faithful baseline and each
+optimized variant can be compiled from the same tree:
+
+  REPRO_PERF="bf16_experts,gqa_grouped,prob_bf16,microbatch=4" \
+      python -m repro.launch.dryrun ...
+
+or programmatically ``perf.set_flags(bf16_experts=True)`` (tests use this to
+assert numerical parity between paths).  Flags are read at TRACE time; a
+process sees a consistent setting.
+
+Flags:
+  bf16_experts  — MoE expert matmuls read bf16 operands with fp32 MXU
+                  accumulation (instead of materializing fp32 casts of the
+                  all-gathered expert weights).
+  gqa_grouped   — GQA attention contracts (B, Hkv, G, S, D) grouped einsums
+                  instead of jnp.repeat'ing K/V to Hq (removes the group-
+                  factor from K/V bytes).
+  prob_bf16     — attention probabilities cast to bf16 for the p·V matmul
+                  (max/lse stay fp32; flash-attention standard practice).
+  microbatch=N  — grad-accumulation over N microbatches inside the train
+                  step (activation temp ÷ N; grads reduced once).
+  opt_all       — shorthand for every boolean flag above.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+__all__ = ["PerfFlags", "flags", "set_flags", "from_env"]
+
+
+@dataclasses.dataclass
+class PerfFlags:
+    bf16_experts: bool = False
+    gqa_grouped: bool = False
+    prob_bf16: bool = False
+    microbatch: int = 1
+    # MoE dispatch enters shard_map in the residual's natural (B, S, M)
+    # layout (batch->dp axes, seq->model) and flattens INSIDE the body.
+    # The baseline's (B·S, M) flatten has no efficient SPMD lowering from
+    # the 2-axis layout, so GSPMD replicates the full activation every MoE
+    # layer ('involuntary full rematerialization' warnings).
+    # DEFAULT ON after the §Perf hillclimb (-67% collective on deepseek
+    # train_4k, routing-identical); baselines reproduce with
+    # REPRO_PERF=moe_3d=0.
+    moe_3d: bool = True
+    # ZeRO-1 grad path in the dry-run's train step (reduce-scatter grads +
+    # all-gather updated params instead of all-reduce)
+    zero1: bool = False
+    # When a model's head count does not divide the model axis (smollm: 9
+    # heads, mamba2: 24 SSD heads, vs 16-way TP), the baseline replicates
+    # the whole mixer on the model axis (16x flops+bytes).  This flag
+    # spreads BATCH over the model axis inside such blocks instead — pure
+    # DP where TP has nothing to shard.
+    dp_over_model: bool = False
+    # Override the SSD chunk length (0 = use the arch config).  Intra-chunk
+    # score/decay streams scale with chunk Q (total ~ L·Q elements), so
+    # smaller chunks trade matmul shape for bytes.
+    ssd_chunk: int = 0
+    # Replicate ff-dim weight shards (rules ff->None).  Pairs with
+    # dp_over_model on small models: model-sharded conv/MLP weights force
+    # a batch-(data,model) -> channel-model activation transition that
+    # GSPMD can only do by full replication (observed on mamba2: 382 GB/dev
+    # all-gather).  Replicated weights make those blocks pure local DP.
+    replicate_ff: bool = False
+
+
+_FLAGS = PerfFlags()
+
+
+def flags() -> PerfFlags:
+    return _FLAGS
+
+
+def set_flags(**kw) -> PerfFlags:
+    for k, v in kw.items():
+        if not hasattr(_FLAGS, k):
+            raise KeyError(k)
+        setattr(_FLAGS, k, v)
+    return _FLAGS
+
+
+def from_env(env: str | None = None) -> PerfFlags:
+    """Parse REPRO_PERF and apply."""
+    spec = env if env is not None else os.environ.get("REPRO_PERF", "")
+    for tok in filter(None, (t.strip() for t in spec.split(","))):
+        if tok == "opt_all":
+            set_flags(bf16_experts=True, gqa_grouped=True, prob_bf16=True,
+                      moe_3d=True)
+        elif "=" in tok:
+            k, v = tok.split("=", 1)
+            set_flags(**{k: int(v)})
+        else:
+            set_flags(**{tok: True})
+    return _FLAGS
+
+
+from_env()

@@ -1,0 +1,5 @@
+from .checkpoint import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
+from .elastic import largest_submesh_shape, remesh, reshard_state
+from .train_step import (TrainStepConfig, init_train_state, make_train_state_specs,
+                         make_train_step)
+from .trainer import Trainer, TrainerConfig

@@ -1,0 +1,172 @@
+"""Train-step factory: builds the jitted, sharded train step for an arch on
+a mesh, with the distribution features switchable per config:
+
+* plain DP+TP+EP (GSPMD-inserted all-reduce), or
+* ZeRO-1 ``bucketed_rs`` mode: reduce-scatter grads + all-gather updates
+  (collective bytes halve vs. all-reduce at scale),
+* optional error-feedback int8 gradient compression (ef8),
+* remat / scan-over-layers come from the ArchConfig.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import DEFAULT_RULES, ShardingRules, boxed_specs, build, unbox
+from ..optim import (AdamWConfig, adamw_init, adamw_update, ef_compress_grads,
+                     ef_init)
+
+__all__ = ["TrainState", "TrainStepConfig", "make_train_state_specs",
+           "make_train_step", "init_train_state"]
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    grad_compress: bool = False       # error-feedback int8
+    zero1: bool = False               # reduce-scatter/all-gather grad path
+    rules: ShardingRules = DEFAULT_RULES
+
+
+class TrainState(dict):
+    """params / opt (m, v, count) / step / ef_errors (optional)."""
+
+
+def _opt_cfg(cfg: ArchConfig, ts: TrainStepConfig) -> AdamWConfig:
+    """bf16 AdamW moments for bf16-param archs (671B-scale memory)."""
+    import dataclasses
+    if cfg.bf16_params and ts.optimizer.state_dtype == jnp.float32:
+        return dataclasses.replace(ts.optimizer, state_dtype=jnp.bfloat16)
+    return ts.optimizer
+
+
+def init_train_state(cfg: ArchConfig, key, ts: TrainStepConfig) -> dict:
+    bundle = build(cfg)
+    params = unbox(bundle.init(key))
+    state = {"params": params,
+             "opt": adamw_init(params, _opt_cfg(cfg, ts))._asdict(),
+             "step": jnp.zeros((), jnp.int32)}
+    if ts.grad_compress:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def make_train_state_specs(cfg: ArchConfig, mesh: Mesh, ts: TrainStepConfig):
+    """PartitionSpec pytree for the full train state."""
+    bundle = build(cfg)
+    pspecs = bundle.param_specs(mesh, ts.rules)
+    specs = {"params": pspecs,
+             "opt": {"m": pspecs, "v": pspecs, "count": P()},
+             "step": P()}
+    if ts.grad_compress:
+        specs["ef"] = pspecs
+    return specs
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes or None)
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh,
+                    ts: TrainStepConfig = TrainStepConfig(),
+                    donate: bool = True):
+    """Returns (step_fn, state_specs, batch_specs_fn). step_fn(state, batch)
+    -> (state, metrics); jit with shardings attached."""
+    bundle = build(cfg)
+    state_specs = make_train_state_specs(cfg, mesh, ts)
+    from ..optim.adamw import AdamWState
+
+    def loss_wrapper(params, batch):
+        return bundle.loss(params, batch, mesh=mesh)
+
+    def _value_and_grad(params, batch):
+        from ..perf import flags
+        mb = flags().microbatch
+        bsz = batch["tokens"].shape[0]
+        if mb <= 1 or bsz % mb:
+            return jax.value_and_grad(loss_wrapper, has_aux=True)(params, batch)
+        # gradient accumulation over microbatches: live activation temp ÷ mb,
+        # grads reduced/updated once.  Microbatches are re-constrained to the
+        # full DP sharding (the reshape alone would pin each microbatch to a
+        # subset of the data axis); tokens are tiny so the reshard is cheap.
+        bspec = batch_pspec(mesh)
+        split = jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x.reshape(mb, bsz // mb, *x.shape[1:]),
+                NamedSharding(mesh, P(None, *bspec))), batch)
+
+        def micro(carry, mbatch):
+            g_acc, loss_acc, aux = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_wrapper, has_aux=True)(params, mbatch)
+            g_acc = jax.tree.map(lambda a, b: a + b / mb, g_acc, g)
+            return (g_acc, loss_acc + loss / mb,
+                    jax.tree.map(lambda a, b: a + b / mb, aux, metrics)), None
+
+        g0 = jax.tree.map(jnp.zeros_like, params)
+        probe = jax.eval_shape(
+            lambda p, b: loss_wrapper(p, b)[1], params,
+            jax.tree.map(lambda x: x[0], split))
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), probe)
+        # unroll: exact AOT cost accounting (a while-op body is counted once
+        # by XLA cost_analysis) — and the unrolled grad-accum loop lets the
+        # scheduler overlap one microbatch's collectives with the next's
+        # compute on the real target
+        (grads, loss, metrics), _ = jax.lax.scan(
+            micro, (g0, jnp.zeros((), jnp.float32), m0), split, unroll=True)
+        return (loss, metrics), grads
+
+    def step_fn(state, batch):
+        params = state["params"]
+        (loss, metrics), grads = _value_and_grad(params, batch)
+        if ts.grad_compress:
+            grads, new_ef = ef_compress_grads(grads, state["ef"])
+        opt_state = AdamWState(state["opt"]["m"], state["opt"]["v"],
+                               state["opt"]["count"])
+        if ts.zero1:
+            # ZeRO-1: shard otherwise-replicated grads over the data axis so
+            # the DP reduction lowers to reduce-scatter, the optimizer update
+            # runs sharded, and the param refresh is an all-gather.
+            dsize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+            gspecs = state_specs["params"]
+
+            def z1(g, s):
+                replicated = all(a is None for a in (tuple(s) or (None,)))
+                if replicated and g.ndim and g.shape[0] % dsize == 0 and dsize > 1:
+                    return jax.lax.with_sharding_constraint(
+                        g, NamedSharding(mesh, P(*(("data",)
+                                                   + (None,) * (g.ndim - 1)))))
+                return g
+            grads = jax.tree.map(z1, grads, gspecs)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, _opt_cfg(cfg, ts))
+        new_state = {"params": new_params, "opt": new_opt._asdict(),
+                     "step": state["step"] + 1}
+        if ts.grad_compress:
+            new_state["ef"] = new_ef
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, metrics
+
+    bspec = batch_pspec(mesh)
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs),
+        {"tokens": NamedSharding(mesh, bspec),
+         **({"memory": NamedSharding(mesh, bspec)}
+            if (cfg.vision or cfg.encoder) else {})},
+    )
+    out_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs),
+        NamedSharding(mesh, P()),
+    )
+    jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings,
+                     donate_argnums=(0,) if donate else ())
+    return jitted, state_specs

@@ -1,0 +1,82 @@
+"""Field axioms for GF(q), including hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import get_field, is_prime_power, prime_power_decompose
+
+PRIME_POWERS = [2, 3, 4, 5, 7, 8, 9, 11, 13, 16, 17, 19, 23, 25, 27, 32, 49, 64, 81]
+
+
+@pytest.mark.parametrize("q", PRIME_POWERS)
+def test_field_axioms_exhaustive_small(q):
+    f = get_field(q)
+    a = np.arange(q)
+    # additive group
+    assert (f.add(a, 0) == a).all()
+    assert (f.add(a, f.neg(a)) == 0).all()
+    # multiplicative group
+    nz = a[1:]
+    assert (f.mul(a, 1) == a).all()
+    assert (f.mul(nz, f.inv(nz)) == 1).all()
+    assert (f.mul(a, 0) == 0).all()
+    # commutativity on the full table
+    aa, bb = np.meshgrid(a, a)
+    assert (f.add(aa, bb) == f.add(bb, aa)).all()
+    assert (f.mul(aa, bb) == f.mul(bb, aa)).all()
+
+
+@pytest.mark.parametrize("q", [4, 8, 9, 16, 25, 27])
+def test_associativity_distributivity_sampled(q):
+    f = get_field(q)
+    rng = np.random.default_rng(0)
+    x, y, z = (rng.integers(0, q, size=500) for _ in range(3))
+    assert (f.add(f.add(x, y), z) == f.add(x, f.add(y, z))).all()
+    assert (f.mul(f.mul(x, y), z) == f.mul(x, f.mul(y, z))).all()
+    assert (f.mul(x, f.add(y, z)) == f.add(f.mul(x, y), f.mul(x, z))).all()
+
+
+@pytest.mark.parametrize("q", [5, 8, 9, 13, 27])
+def test_primitive_element_generates(q):
+    f = get_field(q)
+    xi = f.primitive_element()
+    powers = {1}
+    cur = 1
+    for _ in range(q - 2):
+        cur = int(f.mul(cur, xi))
+        powers.add(cur)
+    assert len(powers) == q - 1
+    assert 0 not in powers
+
+
+@pytest.mark.parametrize("q", [5, 9, 13, 17, 25])
+def test_squares_are_half(q):
+    # for odd q there are (q-1)/2 nonzero squares
+    f = get_field(q)
+    assert len(f.squares()) == (q - 1) // 2
+
+
+@given(st.integers(min_value=2, max_value=2000))
+@settings(max_examples=200, deadline=None)
+def test_prime_power_decompose_consistent(n):
+    pm = prime_power_decompose(n)
+    if pm is None:
+        assert not is_prime_power(n)
+    else:
+        p, m = pm
+        assert p**m == n
+        assert is_prime_power(n)
+
+
+@given(st.sampled_from([3, 4, 5, 7, 8, 9, 11, 16]), st.data())
+@settings(max_examples=100, deadline=None)
+def test_field_properties_hypothesis(q, data):
+    f = get_field(q)
+    x = data.draw(st.integers(0, q - 1))
+    y = data.draw(st.integers(0, q - 1))
+    # sub is inverse of add
+    assert int(f.add(f.sub(x, y), y)) == x
+    # Frobenius: (x+y)^p = x^p + y^p in characteristic p
+    p = f.p
+    assert int(f.pow(f.add(x, y), p)) == int(f.add(f.pow(x, p), f.pow(y, p)))

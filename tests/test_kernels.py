@@ -1,0 +1,220 @@
+"""Kernel validation: Pallas (interpret) + jnp paths vs. pure-jnp oracles,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(42)
+
+
+def rand(*s, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=s) * scale, dtype)
+
+
+ATTN_SHAPES = [
+    # (b, hq, hkv, sq, skv, d, causal, window)
+    (2, 4, 2, 64, 64, 32, True, None),
+    (1, 8, 1, 128, 128, 16, True, 32),     # MQA + window
+    (2, 4, 4, 32, 96, 32, False, None),    # cross-attn-like
+    (1, 2, 2, 16, 64, 8, True, None),      # decode-ish offset
+    (1, 6, 3, 96, 96, 64, True, 48),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_jnp_vs_ref(case, dtype):
+    b, hq, hkv, sq, skv, d, causal, window = case
+    q, k, v = rand(b, hq, sq, d, dtype=dtype), rand(b, hkv, skv, d, dtype=dtype), \
+        rand(b, hkv, skv, d, dtype=dtype)
+    off = skv - sq
+    o_ref = ref.attention_ref(q, k, v, causal=causal, window=window, q_offset=off)
+    o = ops.attention(q, k, v, causal=causal, window=window, q_offset=off,
+                      impl="jnp", block_q=16)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o, np.float32), atol=tol, rtol=tol)
+
+
+PALLAS_ATTN = [
+    (1, 2, 1, 64, 64, 32, True, None),
+    (1, 4, 2, 128, 128, 32, True, 64),
+    (2, 2, 2, 64, 64, 16, False, None),
+    (1, 4, 4, 256, 256, 64, True, None),
+]
+
+
+@pytest.mark.parametrize("case", PALLAS_ATTN)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_pallas_interpret_vs_ref(case, dtype):
+    b, hq, hkv, sq, skv, d, causal, window = case
+    q, k, v = rand(b, hq, sq, d, dtype=dtype), rand(b, hkv, skv, d, dtype=dtype), \
+        rand(b, hkv, skv, d, dtype=dtype)
+    o_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+    o = ops.attention(q, k, v, causal=causal, window=window,
+                      impl="pallas_interpret", block_q=32, block_k=32)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o, np.float32), atol=tol, rtol=tol)
+
+
+SSD_SHAPES = [
+    # (b, l, h, p, g, n, chunk)
+    (2, 64, 4, 16, 1, 32, 16),
+    (1, 96, 6, 8, 2, 16, 32),
+    (1, 32, 2, 32, 1, 64, 32),
+    (2, 128, 8, 16, 4, 8, 64),
+]
+
+
+@pytest.mark.parametrize("case", SSD_SHAPES)
+def test_ssd_jnp_vs_ref(case):
+    b, l, h, p, g, n, chunk = case
+    x = rand(b, l, h, p)
+    dt = jnp.abs(rand(b, l, h)) * 0.1 + 0.01
+    a_log = rand(h, scale=0.5)
+    bm, cm, ds = rand(b, l, g, n), rand(b, l, g, n), rand(h)
+    y1, s1 = ref.ssd_ref(x, dt, a_log, bm, cm, ds)
+    y2, s2 = ops.ssd(x, dt, a_log, bm, cm, ds, chunk=chunk, impl="jnp")
+    np.testing.assert_allclose(y1, y2, atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(s1, s2, atol=3e-4, rtol=3e-4)
+
+
+@pytest.mark.parametrize("case", SSD_SHAPES[:2])
+def test_ssd_pallas_interpret_vs_ref(case):
+    b, l, h, p, g, n, chunk = case
+    x = rand(b, l, h, p)
+    dt = jnp.abs(rand(b, l, h)) * 0.1 + 0.01
+    a_log = rand(h, scale=0.5)
+    bm, cm, ds = rand(b, l, g, n), rand(b, l, g, n), rand(h)
+    y1, _ = ref.ssd_ref(x, dt, a_log, bm, cm, ds)
+    y3, _ = ops.ssd(x, dt, a_log, bm, cm, ds, chunk=chunk,
+                    impl="pallas_interpret")
+    np.testing.assert_allclose(y1, y3, atol=3e-4, rtol=3e-4)
+
+
+def test_ssd_carry_state_chunked_vs_ref():
+    """Chunked prefill with carried state == one long ref recurrence."""
+    b, l, h, p, g, n = 1, 64, 4, 16, 1, 32
+    x = rand(b, l, h, p)
+    dt = jnp.abs(rand(b, l, h)) * 0.1 + 0.01
+    a_log = rand(h, scale=0.5)
+    bm, cm, ds = rand(b, l, g, n), rand(b, l, g, n), rand(h)
+    y_ref, s_ref = ref.ssd_ref(x, dt, a_log, bm, cm, ds)
+    # split into two halves, carrying state
+    y1, s_mid = ops.ssd(x[:, :32], dt[:, :32], a_log, bm[:, :32], cm[:, :32],
+                        ds, chunk=16, impl="jnp")
+    y2, s_end = ops.ssd(x[:, 32:], dt[:, 32:], a_log, bm[:, 32:], cm[:, 32:],
+                        ds, chunk=16, impl="jnp", state=s_mid)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_ref,
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(s_end, s_ref, atol=3e-4, rtol=3e-4)
+
+
+def test_ssd_decode_steps_match_ref():
+    b, l, h, p, g, n = 1, 16, 4, 8, 1, 16
+    x = rand(b, l, h, p)
+    dt = jnp.abs(rand(b, l, h)) * 0.1 + 0.01
+    a_log = rand(h, scale=0.5)
+    bm, cm, ds = rand(b, l, g, n), rand(b, l, g, n), rand(h)
+    y_ref, _ = ref.ssd_ref(x, dt, a_log, bm, cm, ds)
+    s = jnp.zeros((b, h, n, p))
+    for t in range(l):
+        y_t, s = ops.ssd_decode_step(s, x[:, t], dt[:, t], a_log,
+                                     bm[:, t], cm[:, t], ds)
+        np.testing.assert_allclose(y_t, y_ref[:, t], atol=3e-4, rtol=3e-4)
+
+
+def test_rglru_vs_ref_and_decode():
+    b, l, d = 2, 48, 24
+    x, ag, ig, ap = rand(b, l, d), rand(b, l, d), rand(b, l, d), rand(d)
+    y1, s1 = ref.rglru_ref(x, ag, ig, ap)
+    y2, s2 = ops.rglru(x, ag, ig, ap)
+    np.testing.assert_allclose(y1, y2, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(s1, s2, atol=2e-5, rtol=2e-5)
+    s = jnp.zeros((b, d))
+    for t in range(8):
+        y_t, s = ops.rglru_decode_step(s, x[:, t], ag[:, t], ig[:, t], ap)
+        np.testing.assert_allclose(y_t, y1[:, t], atol=2e-5, rtol=2e-5)
+
+
+def test_rglru_carry_state():
+    b, l, d = 1, 32, 16
+    x, ag, ig, ap = rand(b, l, d), rand(b, l, d), rand(b, l, d), rand(d)
+    y_ref, _ = ref.rglru_ref(x, ag, ig, ap)
+    y1, s_mid = ops.rglru(x[:, :16], ag[:, :16], ig[:, :16], ap)
+    y2, _ = ops.rglru(x[:, 16:], ag[:, 16:], ig[:, 16:], ap, state=s_mid)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_ref,
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_attention_kv_len_masking():
+    """decode-style: only the first kv_len keys are attendable."""
+    q = rand(2, 2, 1, 16)
+    k = rand(2, 2, 32, 16)
+    v = rand(2, 2, 32, 16)
+    kv_len = jnp.array([5, 9])
+    o = ops.attention(q, k, v, causal=False, kv_len=kv_len, impl="jnp")
+    o_ref = ref.attention_ref(q, k, v, causal=False, kv_len=kv_len)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+    # equals truncated-cache attention per batch row
+    for i, n in enumerate([5, 9]):
+        o_t = ref.attention_ref(q[i:i+1], k[i:i+1, :, :n], v[i:i+1, :, :n],
+                                causal=False)
+        np.testing.assert_allclose(o[i:i+1], o_t, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", [
+    dict(b=1, hq=4, hkv=4, sq=128, skv=128, d=32, causal=True, window=None),
+    dict(b=2, hq=6, hkv=2, sq=128, skv=128, d=16, causal=True, window=None),
+    dict(b=1, hq=4, hkv=1, sq=128, skv=128, d=32, causal=True, window=48),
+    dict(b=1, hq=2, hkv=2, sq=128, skv=256, d=32, causal=False, window=None),
+])
+def test_flash_attention_backward_interpret_vs_ref(case):
+    """The Pallas flash backward (dq/dk/dv) must match jax.vjp of the
+    pure-jnp oracle, including GQA group-summed dk/dv and window masks."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import attention_ref
+    ks = jax.random.split(jax.random.key(7), 4)
+    q = jax.random.normal(ks[0], (case["b"], case["hq"], case["sq"], case["d"]),
+                          jnp.float32)
+    k = jax.random.normal(ks[1], (case["b"], case["hkv"], case["skv"], case["d"]),
+                          jnp.float32)
+    v = jax.random.normal(ks[2], (case["b"], case["hkv"], case["skv"], case["d"]),
+                          jnp.float32)
+    do = jax.random.normal(ks[3], q.shape, jnp.float32)
+
+    def f_ref(q, k, v):
+        return attention_ref(q, k, v, causal=case["causal"],
+                             window=case["window"])
+
+    def f_pallas(q, k, v):
+        return flash_attention(q, k, v, causal=case["causal"],
+                               window=case["window"], block_q=64, block_k=64,
+                               interpret=True)
+
+    o_ref, vjp_ref = jax.vjp(f_ref, q, k, v)
+    o_pal, vjp_pal = jax.vjp(f_pallas, q, k, v)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=2e-3, rtol=2e-3)
+    for g_ref, g_pal, name in zip(vjp_ref(do), vjp_pal(do), "qkv"):
+        np.testing.assert_allclose(
+            np.asarray(g_pal), np.asarray(g_ref), atol=3e-3, rtol=3e-3,
+            err_msg=f"d{name} mismatch in {case}")
+
+
+def test_flash_attention_backward_bf16_grads_finite():
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 32), jnp.bfloat16)
+    loss = lambda q, k, v: flash_attention(
+        q, k, v, causal=True, interpret=True).astype(jnp.float32).sum()
+    gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for g in (gq, gk, gv):
+        assert np.isfinite(np.asarray(g, np.float32)).all()

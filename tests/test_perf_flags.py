@@ -1,0 +1,182 @@
+"""§Perf optimization flags: every gated fast path must match the
+paper-faithful baseline numerically (the hillclimb must not buy roofline
+with wrong answers)."""
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import perf
+
+import os as _os
+SRC_PATH = _os.path.join(_os.path.dirname(_os.path.dirname(_os.path.abspath(__file__))), "src")
+
+
+@contextlib.contextmanager
+def perf_flags(**kw):
+    old = {k: getattr(perf.flags(), k) for k in kw}
+    perf.set_flags(**kw)
+    try:
+        yield
+    finally:
+        perf.set_flags(**old)
+
+
+def _qkv(b=2, hq=6, hkv=2, sq=64, skv=64, d=32, dtype=jnp.bfloat16, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_gqa_grouped_matches_baseline(window):
+    from repro.kernels import ops
+    q, k, v = _qkv()
+    base = ops.attention(q, k, v, causal=True, window=window, impl="jnp",
+                         block_q=32)
+    with perf_flags(gqa_grouped=True):
+        opt = ops.attention(q, k, v, causal=True, window=window, impl="jnp",
+                            block_q=32)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_prob_bf16_close_to_baseline():
+    from repro.kernels import ops
+    q, k, v = _qkv(seed=1)
+    base = ops.attention(q, k, v, causal=True, impl="jnp", block_q=32)
+    with perf_flags(prob_bf16=True, gqa_grouped=True):
+        opt = ops.attention(q, k, v, causal=True, impl="jnp", block_q=32)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32), atol=4e-2, rtol=4e-2)
+
+
+def test_prob_bf16_with_kv_len_ragged_decode():
+    from repro.kernels import ops
+    q, k, v = _qkv(b=3, sq=1, skv=40, seed=2)
+    kv_len = jnp.asarray([5, 17, 40])
+    base = ops.attention(q, k, v, causal=False, kv_len=kv_len, impl="jnp")
+    with perf_flags(prob_bf16=True, gqa_grouped=True):
+        opt = ops.attention(q, k, v, causal=False, kv_len=kv_len, impl="jnp")
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32), atol=4e-2, rtol=4e-2)
+
+
+def test_bf16_experts_matches_fp32_path():
+    from repro.configs import get_arch
+    from repro.models import unbox
+    from repro.models.moe import init_moe, _global_scatter_path
+    cfg = get_arch("granite-moe-3b-a800m").reduced()
+    p = unbox(init_moe(cfg, jax.random.key(0)))
+    x = jax.random.normal(jax.random.key(1), (64, cfg.d_model), jnp.bfloat16)
+    base, aux_b = _global_scatter_path(cfg, p, x)
+    with perf_flags(bf16_experts=True):
+        opt, aux_o = _global_scatter_path(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32), atol=4e-2, rtol=6e-2)
+    assert float(aux_b) == pytest.approx(float(aux_o), rel=1e-5)
+
+
+def test_microbatch_grad_accumulation_parity():
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.train_step import (TrainStepConfig, init_train_state,
+                                        make_train_step)
+    cfg = get_arch("smollm-135m").reduced()
+    mesh = make_host_mesh(1, 1)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 16), 0,
+                                          cfg.vocab)}
+    losses = {}
+    for mb in (1, 4):
+        with perf_flags(microbatch=mb):
+            ts = TrainStepConfig()
+            step_fn, _ = make_train_step(cfg, mesh, ts, donate=False)
+            state = init_train_state(cfg, jax.random.key(0), ts)
+            for _ in range(2):
+                state, m = step_fn(state, batch)
+            losses[mb] = float(np.asarray(m["loss"]))
+    # same data, same model; accumulation reorders float adds only
+    assert losses[1] == pytest.approx(losses[4], rel=2e-4), losses
+
+
+def test_moe_3d_matches_2d_dispatch():
+    """moe_3d regroups tokens per device but must route every token to the
+    same experts; with ample capacity (no drops) outputs are identical."""
+    import os, subprocess, sys, textwrap, json
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import Mesh
+        import dataclasses
+        from repro import perf
+        from repro.configs import get_arch
+        from repro.models import unbox
+        from repro.models.moe import apply_moe, init_moe
+
+        cfg = get_arch("granite-moe-3b-a800m").reduced()
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        p = unbox(init_moe(cfg, jax.random.key(0)))
+        x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model),
+                              jnp.bfloat16)
+        with mesh:
+            y2d, aux2d = apply_moe(cfg, p, x, mesh=mesh, impl="a2a")
+            perf.set_flags(moe_3d=True)
+            y3d, aux3d = apply_moe(cfg, p, x, mesh=mesh, impl="a2a")
+        err = float(jnp.max(jnp.abs(y2d.astype(jnp.float32)
+                                    - y3d.astype(jnp.float32))))
+        print(json.dumps({"err": err, "aux2d": float(aux2d),
+                          "aux3d": float(aux3d)}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC_PATH)
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_PERF", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rep["err"] < 0.05, rep
+    assert rep["aux2d"] == pytest.approx(rep["aux3d"], rel=1e-4)
+
+
+def test_dp_over_model_is_sharding_only():
+    """dp_over_model only changes layouts; the loss must match the baseline
+    bit-for-bit-ish on a mesh whose model axis does not divide the heads."""
+    import os, subprocess, sys, textwrap, json
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+        import json
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro import perf
+        from repro.configs import get_arch
+        from repro.models import build, unbox
+
+        cfg = get_arch("smollm-135m").reduced()   # 4 heads
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 3), ("data", "model"))
+        bundle = build(cfg)
+        params = unbox(bundle.init(jax.random.key(0)))
+        batch = {"tokens": jax.random.randint(jax.random.key(1), (6, 32), 0,
+                                              cfg.vocab)}
+        with mesh:
+            base, _ = bundle.loss(params, batch, mesh=mesh)
+            perf.set_flags(dp_over_model=True)
+            opt, _ = bundle.loss(params, batch, mesh=mesh)
+        print(json.dumps({"base": float(base), "opt": float(opt)}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC_PATH)
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_PERF", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rep["base"] == pytest.approx(rep["opt"], rel=1e-5), rep

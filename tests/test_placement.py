@@ -1,0 +1,124 @@
+"""fabric.placement: routing conservation, strategy comparison, and the
+paper tie-in (packing TP groups beats naive placement on a projective
+fabric)."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_topology
+from repro.fabric.placement import (Placement, collective_traffic,
+                                    evaluate_placements, greedy_improve,
+                                    link_loads, place_mesh)
+
+MESH = (8, 8)
+AXES = ("data", "model")
+TRAFFIC = {"data": ("ring", 1.0), "model": ("all_to_all", 1.0)}
+
+
+def _graph():
+    return build_topology("demi_pn", 9)  # 91 routers
+
+
+def test_traffic_conservation():
+    src, dst, byts = collective_traffic(MESH, AXES, TRAFFIC)
+    n = int(np.prod(MESH))
+    # ring: every chip sends 2(n-1)/n once; a2a: (n-1) sends of 1/n
+    expect = n * (2 * 7 / 8) + n * 7 * (1 / 8)
+    assert byts.sum() == pytest.approx(expect)
+    assert (src != dst).all()
+
+
+def test_link_loads_route_all_bytes():
+    g = _graph()
+    p = place_mesh(g, MESH, AXES, terminals_per_router=1, strategy="linear")
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    r = link_loads(p, traffic)
+    # total arc-bytes = sum over demands of bytes * distance(src, dst) —
+    # shortest-path routing conserves byte-hops
+    from repro.core.graph import bfs_distances
+    src, dst, byts = traffic
+    rs, rd = p.router_of[src], p.router_of[dst]
+    dist = np.stack([bfs_distances(g, s) for s in range(g.n)])
+    expect = float((byts * dist[rs, rd]).sum())
+    assert r["loads"].sum() == pytest.approx(expect, rel=1e-9)
+    assert r["max"] >= r["mean"] > 0
+
+
+def test_same_router_traffic_is_free():
+    g = _graph()
+    # all chips of a model group on one router -> a2a stays local
+    p = place_mesh(g, (1, 8), ("data", "model"), terminals_per_router=8,
+                   strategy="linear")
+    traffic = collective_traffic((1, 8), ("data", "model"),
+                                 {"model": ("all_to_all", 1.0)})
+    assert link_loads(p, traffic)["max"] == 0.0
+
+
+def test_group_placement_beats_linear_for_tp_traffic():
+    """Packing each TP group onto few routers (the electrical-group /
+    subplane layout) must reduce max link load vs spreading it."""
+    g = _graph()
+    traffic = collective_traffic(MESH, AXES, {"model": ("all_to_all", 1.0)})
+    # linear fills routers chip-major => model groups are split across
+    # routers at delta0=1... with delta0=4, 'group' packs each 8-chip model
+    # group onto 2 routers while 'linear' already does the same; use a
+    # transposed mesh so linear splits groups:
+    p_bad = place_mesh(g, (8, 8), ("model", "data"), 4, "linear")
+    tr_bad = collective_traffic((8, 8), ("model", "data"),
+                                {"model": ("all_to_all", 1.0)})
+    p_good = place_mesh(g, (8, 8), ("data", "model"), 4, "group")
+    m_bad = link_loads(p_bad, tr_bad)["max"]
+    m_good = link_loads(p_good, traffic)["max"]
+    assert m_good <= m_bad
+
+
+def test_greedy_improve_never_worse():
+    g = _graph()
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    p0 = place_mesh(g, MESH, AXES, 1, "random", seed=3)
+    base = link_loads(p0, traffic)["max"]
+    _, improved = greedy_improve(p0, traffic, iters=60, seed=4)
+    assert improved <= base
+
+
+def test_evaluate_placements_reports_all_strategies():
+    g = _graph()
+    out = evaluate_placements(g, MESH, AXES, 1, TRAFFIC)
+    assert set(out) == {"linear", "group", "random"}
+    for v in out.values():
+        assert v["max"] >= v["mean"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): routing invariants hold for arbitrary traffic
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    q=st.sampled_from([5, 7, 8]),
+    d0=st.integers(1, 4),
+    dshape=st.sampled_from([(4, 4), (2, 8), (8, 2)]),
+    ring_b=st.floats(0.1, 10.0),
+    a2a_b=st.floats(0.0, 10.0),
+    strat=st.sampled_from(["linear", "group", "random"]),
+)
+def test_byte_hop_conservation_property(q, d0, dshape, ring_b, a2a_b, strat):
+    """For ANY placement and payload mix, routed arc-bytes must equal
+    Σ demand·distance (shortest-path routing conserves byte-hops)."""
+    g = build_topology("demi_pn", q)
+    if int(np.prod(dshape)) > g.n * d0:
+        return  # job doesn't fit this fabric
+    spec = {"data": ("ring", ring_b), "model": ("all_to_all", a2a_b)}
+    p = place_mesh(g, dshape, ("data", "model"), d0, strat, seed=1)
+    traffic = collective_traffic(dshape, ("data", "model"), spec)
+    from repro.core.graph import bfs_distances
+    src, dst, byts = traffic
+    rs, rd = p.router_of[src], p.router_of[dst]
+    dist = np.stack([bfs_distances(g, s) for s in range(g.n)])
+    r = link_loads(p, traffic)
+    assert r["loads"].sum() == pytest.approx(
+        float((byts * dist[rs, rd]).sum()), rel=1e-9)
+    assert (r["loads"] >= -1e-12).all()

@@ -1,0 +1,164 @@
+"""Projective-plane axioms and the structure of PN / demi-PN / OFT / MLFM."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    demi_pn_graph,
+    get_field,
+    incidence_lists,
+    mlfm_graph,
+    num_points,
+    oft_graph,
+    pn_graph,
+    points,
+    self_orthogonal_points,
+    subplane_classes,
+    subplane_line_classes,
+)
+from repro.core.projective import normalize_points, point_index
+
+QS = [2, 3, 4, 5, 7, 8, 9]
+
+
+@pytest.mark.parametrize("q", QS)
+def test_plane_axioms(q):
+    """q+1 points per line; every point on q+1 lines; two distinct points on
+    exactly one common line (the dual of Lemma 3.8's uniqueness)."""
+    inc = incidence_lists(q)
+    n = num_points(q)
+    assert inc.shape == (n, q + 1)
+    # each point lies on exactly q+1 lines
+    counts = np.bincount(inc.reshape(-1), minlength=n)
+    assert (counts == q + 1).all()
+    # any two points on exactly one common line
+    member = np.zeros((n, n), dtype=np.int32)  # member[line, point]
+    member[np.repeat(np.arange(n), q + 1), inc.reshape(-1)] = 1
+    common = member.T @ member
+    off = common - np.diag(np.diag(common))
+    assert off.max() == 1 and (off + np.eye(n, dtype=np.int32) * (q + 1) >= 1).all()
+
+
+@pytest.mark.parametrize("q", QS)
+def test_incidence_is_orthogonality(q):
+    f = get_field(q)
+    pts = points(q)
+    inc = incidence_lists(q)
+    lines = np.repeat(np.arange(num_points(q)), q + 1)
+    dots = f.dot3(pts[inc.reshape(-1)], pts[lines])
+    assert (dots == 0).all()
+
+
+@pytest.mark.parametrize("q", QS)
+def test_pn_structure(q):
+    g = pn_graph(q)
+    n = num_points(q)
+    assert g.n == 2 * n
+    assert g.is_regular() and g.max_degree == q + 1
+    # bipartite: all edges cross the point/line split
+    assert ((g.edges[:, 0] < n) != (g.edges[:, 1] < n)).all()
+    w = g.distance_distribution([0, n])
+    assert np.allclose(w, [1, q + 1, q * q + q, q * q])
+    kbar = g.average_distance([0])
+    assert abs(kbar - (5 * q * q + 3 * q + 1) / (2 * q * q + 2 * q + 1)) < 1e-12
+
+
+def test_pn2_is_heawood():
+    g = pn_graph(2)
+    assert (g.n, g.num_edges, g.max_degree) == (14, 21, 3)
+    assert g.diameter([0]) == 3
+    # girth 6 (no 4-cycles): adjacency^2 off-diagonal <= 1
+    a = g.adjacency_dense().astype(np.int32)
+    a2 = a @ a
+    off = a2 - np.diag(np.diag(a2))
+    assert off.max() <= 1
+
+
+@pytest.mark.parametrize("q", QS)
+def test_demi_pn_structure(q):
+    g = demi_pn_graph(q)
+    n = num_points(q)
+    assert g.n == n
+    assert g.num_edges == q * (q + 1) ** 2 // 2
+    so = self_orthogonal_points(q)
+    assert len(so) == q + 1
+    deg = g.degrees
+    assert (deg[so] == q).all()
+    mask = np.ones(n, dtype=bool)
+    mask[so] = False
+    assert (deg[mask] == q + 1).all()
+    assert g.diameter() == 2
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5, 7])
+def test_demi_pn_unique_shortest_paths(q):
+    """Lemma 3.8: no 4-cycles => unique minimal path between any pair."""
+    g = demi_pn_graph(q)
+    a = g.adjacency_dense().astype(np.int64)
+    a2 = a @ a
+    off = a2 - np.diag(np.diag(a2))
+    # distance-2 pairs have exactly one common neighbour; adjacent pairs have
+    # at most ... no square means adjacent pairs can share at most 1 too
+    nonadj = (~g.adjacency_dense()) & ~np.eye(g.n, dtype=bool)
+    assert (off[nonadj] == 1).all()
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5])
+def test_oft_structure(q):
+    g = oft_graph(q)
+    n = num_points(q)
+    assert g.n == 3 * n
+    deg = g.degrees
+    assert (deg[:n] == q + 1).all() and (deg[2 * n :] == q + 1).all()
+    assert (deg[n : 2 * n] == 2 * (q + 1)).all()
+    # max distance between leaves is 2
+    leaf = g.meta["leaf_mask"]
+    for v in [0, 1, 2 * n, 3 * n - 1]:
+        d = g.distances_from(v)
+        assert d[leaf].max() == 2
+
+
+@pytest.mark.parametrize("n", [3, 4, 5, 6])
+def test_mlfm_structure(n):
+    g = mlfm_graph(n)
+    n_leaves = n * (n - 1)
+    assert g.n == n_leaves + n * (n - 1) // 2
+    deg = g.degrees
+    assert (deg[:n_leaves] == n - 1).all()
+    assert (deg[n_leaves:] == 2 * (n - 1)).all()
+    leaf = g.meta["leaf_mask"]
+    for v in range(0, n_leaves, max(1, n_leaves // 4)):
+        d = g.distances_from(v)
+        assert d[leaf].max() == 2
+
+
+@pytest.mark.parametrize("q", [4, 9])
+def test_subplane_partition(q):
+    p = int(round(q**0.5))
+    cls = subplane_classes(q)
+    r = p * p - p + 1
+    assert len(np.unique(cls)) == r
+    assert (np.bincount(cls) == p * p + p + 1).all()
+    lcls = subplane_line_classes(q, cls)
+    # each class of the PN graph induces a copy of G_p: (p^2+p+1)(p+1) incidences
+    g = pn_graph(q)
+    n = num_points(q)
+    lbl = np.concatenate([cls, lcls])
+    same = lbl[g.edges[:, 0]] == lbl[g.edges[:, 1]]
+    per = np.bincount(lbl[g.edges[:, 0]][same], minlength=r)
+    assert (per == (p * p + p + 1) * (p + 1)).all()
+
+
+@given(st.sampled_from([3, 4, 5, 7, 8, 9]), st.data())
+@settings(max_examples=60, deadline=None)
+def test_normalize_point_roundtrip(q, data):
+    """Scaling a canonical point by any nonzero scalar normalizes back."""
+    f = get_field(q)
+    pts = points(q)
+    i = data.draw(st.integers(0, num_points(q) - 1))
+    s = data.draw(st.integers(1, q - 1))
+    scaled = np.stack([f.mul(pts[i, k], s) for k in range(3)])
+    canon = normalize_points(f, scaled)
+    assert (canon == pts[i]).all()
+    assert int(point_index(q, canon)) == i

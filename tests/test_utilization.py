@@ -1,0 +1,96 @@
+"""Link-utilization validation: Theorems 3.5/3.9, MMS 8/9, OFT u=1."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    complete_bipartite_graph,
+    complete_graph,
+    demi_pn_graph,
+    hamming_graph,
+    mms_graph,
+    oft_graph,
+    paley_graph,
+    pn_graph,
+    turan_graph,
+    utilization,
+)
+from repro.core.mms import mms_generator_sets
+
+
+@pytest.mark.parametrize("q", [3, 4, 5, 7, 8])
+def test_theorem_3_9_demi_pn_u(q):
+    rep = utilization(demi_pn_graph(q))
+    assert abs(rep.u - (2 * q * q + q + 1) / (2 * q * (q + 1))) < 1e-10
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5])
+def test_pn_symmetric_u1(q):
+    """Theorem 3.5 consequence: G_q symmetric => perfectly balanced."""
+    rep = utilization(pn_graph(q))
+    assert abs(rep.u - 1.0) < 1e-10
+    loads = rep.loads
+    assert np.allclose(loads, loads[0])  # every arc carries identical load
+
+
+@pytest.mark.parametrize("q,expect_moore", [(5, True), (7, False), (9, False),
+                                            (11, False), (13, False)])
+def test_mms_utilization(q, expect_moore):
+    g = mms_graph(q)
+    eps = g.meta["eps"]
+    assert g.max_degree == (3 * q - eps) // 2
+    rep = utilization(g)
+    if expect_moore:  # Hoffman–Singleton graph: symmetric Moore graph
+        assert abs(rep.u - 1.0) < 1e-10
+    else:
+        # Section 4.2: u converges to 8/9; all finite cases land within ~8%
+        assert 0.80 < rep.u < 0.97
+        assert abs(rep.u - 8 / 9) < 0.09
+
+
+def test_mms_generator_sets_cover():
+    for q in [5, 7, 8, 9, 11, 13, 16]:
+        x0, x1, eps = mms_generator_sets(q)
+        assert len(x0) == (q - eps) // 2
+        union = set(x0.tolist()) | set(x1.tolist())
+        assert union == set(range(1, q))
+
+
+@pytest.mark.parametrize("q", [2, 3, 4])
+def test_oft_edge_transitive_u1(q):
+    rep = utilization(oft_graph(q))
+    assert abs(rep.u - 1.0) < 1e-10
+    assert rep.kbar == 2.0
+
+
+def test_symmetric_references_u1():
+    for g in [complete_graph(8), complete_bipartite_graph(6),
+              hamming_graph(5, 2), paley_graph(13), turan_graph(12, 3)]:
+        rep = utilization(g)
+        assert abs(rep.u - 1.0) < 1e-10, g.name
+
+
+def test_loads_conservation():
+    """Total arc load equals total (distance-weighted) traffic."""
+    g = demi_pn_graph(4)
+    rep = utilization(g)
+    total = rep.loads.sum()
+    n = g.n
+    assert abs(total - rep.kbar * n * (n - 1)) < 1e-6
+
+
+def test_valiant_routing_doubles_load_keeps_u():
+    """Valiant randomization [40]: 2x expected arc load, same u, 2x kbar
+    (worst-case-traffic guarantee costs half the uniform throughput)."""
+    from repro.core.utilization import utilization, valiant_report
+    from repro.core import build_topology
+    g = build_topology("demi_pn", 9)
+    base = utilization(g)
+    val = valiant_report(g)
+    assert val.u == base.u
+    assert val.max_load == pytest.approx(2.0 * base.max_load)
+    assert val.kbar == pytest.approx(2.0 * base.kbar)
+    # saturation injection halves: a = Δ·u/k̄_eff
+    a_min = g.max_degree * base.u / base.kbar
+    a_val = g.max_degree * val.u / val.kbar
+    assert a_val == pytest.approx(a_min / 2.0)
