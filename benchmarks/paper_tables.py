@@ -207,3 +207,14 @@ def table6():
         errs.append(abs(row["cost_per_node_usd"] - pt[5]) / pt[5])
         errs.append(abs(row["power_per_node_w"] - pt[6]) / pt[6])
     return rows, max(errs)
+
+
+# name -> builder, in paper order; benchmarks/run.py iterates this for its
+# CSV/JSON output, so new tables only need an entry here
+TABLES = {
+    "table2_topological_params": table2,
+    "table3_structural_params": table3,
+    "table4_10k_nodes": table4,
+    "table5_25k_nodes": table5,
+    "table6_indirect": table6,
+}

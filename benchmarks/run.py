@@ -2,73 +2,118 @@
 + the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows where
 ``derived`` is the headline validation number for that artifact (max
 relative error vs. the paper, or the key reproduced quantity).
+
+``--json PATH`` additionally records per-entry wall time and the numeric
+``max_rel_err`` (where the artifact has one) so future changes have a perf
+trajectory to regress against:
+
+    python -m benchmarks.run --json BENCH_topology.json --only tables
+
+The arc-load engine behind the tables is selected by REPRO_PERF (see
+repro.perf); e.g. ``REPRO_PERF=util_engine=naive`` times the reference
+implementation for comparison.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import json
+import platform
 import time
 
 
-def _run(name, fn, derive):
+def _run(records, name, fn, derive, err_of=None):
     t0 = time.perf_counter()
     out = fn()
-    dt = (time.perf_counter() - t0) * 1e6
-    print(f"{name},{dt:.1f},{derive(out)}", flush=True)
+    dt = time.perf_counter() - t0
+    derived = derive(out)
+    print(f"{name},{dt * 1e6:.1f},{derived}", flush=True)
+    rec = {"name": name, "seconds": round(dt, 6), "derived": derived}
+    if err_of is not None:
+        rec["max_rel_err"] = float(err_of(out))
+    records.append(rec)
     return out
 
 
-def main() -> None:
-    from . import paper_figures as figs
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write per-entry wall time + max_rel_err as JSON")
+    ap.add_argument("--only", choices=["tables", "figures", "all"], default="all",
+                    help="restrict to the paper tables or figures")
+    args = ap.parse_args(argv)
+
     from . import paper_tables as tabs
 
+    records: list[dict] = []
     print("name,us_per_call,derived")
-    _run("table2_topological_params", tabs.table2, lambda o: f"max_err={o[1]:.4f}")
-    _run("table3_structural_params", tabs.table3, lambda o: f"max_err={o[1]:.4f}")
-    _run("table4_10k_nodes", tabs.table4, lambda o: f"max_err={o[1]:.4f}")
-    _run("table5_25k_nodes", tabs.table5, lambda o: f"max_err={o[1]:.4f}")
-    _run("table6_indirect", tabs.table6, lambda o: f"max_err={o[1]:.4f}")
-    _run("fig5_mms_vs_moore", figs.fig5, lambda o: f"tail_vs_8/9_err={o[1]:.4f}")
-    _run("fig6_mms_utilization", figs.fig6, lambda o: f"tail_vs_8/9_err={o[1]:.4f}")
-    _run("fig7_cost_vs_bound", figs.fig7, lambda o: f"bound_violation={o[1]:.4f}")
-    _run("fig8_scalability", figs.fig8, lambda o: f"rows={len(o[0])}")
-    _run("fig9_pn_vs_slimfly", figs.fig9,
-         lambda o: f"demi_pn_worse_than_sf_cases={o[1]:.0f}")
+    if args.only in ("tables", "all"):
+        for name, fn in tabs.TABLES.items():
+            _run(records, name, fn, lambda o: f"max_err={o[1]:.4f}",
+                 err_of=lambda o: o[1])
 
-    # fabric planner on a real dry-run profile when available
-    try:
-        from repro.fabric import StepProfile, plan
-        from .roofline import load_records
-        recs = [r for r in load_records() if r.get("status") == "ok"
-                and r.get("shape") == "train_4k"]
-        if recs:
-            rec = max(recs, key=lambda r: r["collective_bytes_per_device"]
-                      .get("total", 0))
-            prof = StepProfile.from_dryrun(rec)
+    if args.only in ("figures", "all"):
+        from . import paper_figures as figs
 
-            def _best(rows):
-                # paper's Section-5 rule: cheapest fabric within 5% of the
-                # best step time (all candidates are full-bisection sized)
-                t0 = rows[0]["step_comm_ms"]
-                near = [r for r in rows if r["step_comm_ms"] <= 1.05 * t0]
-                c = min(near, key=lambda r: r["usd_per_node"])
-                return f"best={c['fabric']}@{c['usd_per_node']}$"
-            _run(f"fabric_planner[{rec['arch']}]",
-                 lambda: plan(prof, min_terminals=10000), _best)
-    except Exception as e:  # planner needs dry-run artifacts
-        print(f"fabric_planner,0,unavailable({type(e).__name__})")
+        _run(records, "fig5_mms_vs_moore", figs.fig5,
+             lambda o: f"tail_vs_8/9_err={o[1]:.4f}", err_of=lambda o: o[1])
+        _run(records, "fig6_mms_utilization", figs.fig6,
+             lambda o: f"tail_vs_8/9_err={o[1]:.4f}", err_of=lambda o: o[1])
+        _run(records, "fig7_cost_vs_bound", figs.fig7,
+             lambda o: f"bound_violation={o[1]:.4f}", err_of=lambda o: o[1])
+        _run(records, "fig8_scalability", figs.fig8, lambda o: f"rows={len(o[0])}")
+        _run(records, "fig9_pn_vs_slimfly", figs.fig9,
+             lambda o: f"demi_pn_worse_than_sf_cases={o[1]:.0f}")
 
-    # roofline summary over whatever cells have been dry-run
-    try:
-        from .roofline import roofline_table
-        rows, skipped, errors = roofline_table()
-        n_dom = {}
-        for r in rows:
-            n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
-        print(f"roofline_summary,0,cells={len(rows)} skipped={len(skipped)} "
-              f"errors={len(errors)} dominant={n_dom}")
-    except Exception as e:
-        print(f"roofline_summary,0,unavailable({type(e).__name__})")
+    if args.only == "all":
+        # fabric planner on a real dry-run profile when available
+        try:
+            from repro.fabric import StepProfile, plan
+
+            from .roofline import load_records
+            recs = [r for r in load_records() if r.get("status") == "ok"
+                    and r.get("shape") == "train_4k"]
+            if recs:
+                rec = max(recs, key=lambda r: r["collective_bytes_per_device"]
+                          .get("total", 0))
+                prof = StepProfile.from_dryrun(rec)
+
+                def _best(rows):
+                    # paper's Section-5 rule: cheapest fabric within 5% of the
+                    # best step time (all candidates are full-bisection sized)
+                    t0 = rows[0]["step_comm_ms"]
+                    near = [r for r in rows if r["step_comm_ms"] <= 1.05 * t0]
+                    c = min(near, key=lambda r: r["usd_per_node"])
+                    return f"best={c['fabric']}@{c['usd_per_node']}$"
+                _run(records, f"fabric_planner[{rec['arch']}]",
+                     lambda: plan(prof, min_terminals=10000), _best)
+        except Exception as e:  # planner needs dry-run artifacts
+            print(f"fabric_planner,0,unavailable({type(e).__name__})")
+
+        # roofline summary over whatever cells have been dry-run
+        try:
+            from .roofline import roofline_table
+            rows, skipped, errors = roofline_table()
+            n_dom = {}
+            for r in rows:
+                n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+            print(f"roofline_summary,0,cells={len(rows)} skipped={len(skipped)} "
+                  f"errors={len(errors)} dominant={n_dom}")
+        except Exception as e:
+            print(f"roofline_summary,0,unavailable({type(e).__name__})")
+
+    if args.json:
+        from repro.perf import flags
+        payload = {
+            "machine": platform.machine(),
+            "python": platform.python_version(),
+            "util_engine": flags().util_engine,
+            "total_seconds": round(sum(r["seconds"] for r in records), 6),
+            "entries": records,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {args.json} ({len(records)} entries)")
 
 
 if __name__ == "__main__":

@@ -11,10 +11,11 @@ from .cost import (
     watts_per_node,
 )
 from .gf import GF, get_field, is_prime_power, prime_power_decompose
-from .graph import Graph, bfs_distances, distance_distribution
+from .graph import Graph, bfs_distances, bfs_distances_batched, distance_distribution
 from .layout import cable_split, electrical_groups, group_sizes
 from .mms import mms_graph
 from .moore import generalized_moore_kbar, kbar_approx, min_kbar, moore_bound, terminals_bound
+from .orbits import OrbitInfo, automorphism_generators, orbit_info
 from .projective import (
     demi_pn_graph,
     incidence_lists,
@@ -39,6 +40,6 @@ from .reference import (
 )
 from .registry import TOPOLOGIES, build_topology
 from .select import Realization, all_realizations, realizations_for_family, select_topology
-from .utilization import UtilizationReport, arc_loads, utilization
+from .utilization import UtilizationReport, arc_loads, utilization, valiant_report
 
 __all__ = [k for k in dir() if not k.startswith("_")]

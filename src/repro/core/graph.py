@@ -2,7 +2,20 @@
 
 Everything operates on plain numpy; graphs here model router-level fabrics
 (N up to a few tens of thousands), so dense/CSR numpy is the right tool —
-no JAX needed at this layer.
+the JAX layer (repro.core.utilization's ``engine="jax"``) sits on top of
+the same arrays.
+
+Distance queries come in two shapes:
+  * ``bfs_distances``          — one source, CSR frontier expansion;
+  * ``bfs_distances_batched``  — an (S, N) block of sources advanced one
+    BFS level at a time.  Small graphs use dense float32 matmuls (BLAS does
+    a whole level for every source in one GEMM); large graphs fall back to
+    a CSR gather + ``logical_or.reduceat`` sweep in a transposed (N, S)
+    layout so every big array access is row-contiguous.
+
+The Graph object lazily caches derived structure (dense adjacency,
+bipartition, arc sort orders) because the utilization engines and the
+orbit machinery ask for them repeatedly.
 """
 
 from __future__ import annotations
@@ -11,7 +24,16 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["Graph", "bfs_distances", "distance_distribution"]
+from ..perf import flags
+
+__all__ = ["Graph", "bfs_distances", "bfs_distances_batched", "distance_distribution"]
+
+
+def _dense_max_n() -> int:
+    """Above this vertex count the dense (N, N) adjacency and the GEMM-based
+    batched BFS stop being the right tool; CSR sweeps take over.  Shared
+    with the utilization engines via the util_dense_max perf flag."""
+    return flags().util_dense_max
 
 
 @dataclass
@@ -53,6 +75,7 @@ class Graph:
         self.indices = dst
         self.arc_src = src
         self.arc_edge_id = eid
+        self._struct_cache: dict = {}
 
     # ---- basic invariants ----
     @property
@@ -74,11 +97,61 @@ class Graph:
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v] : self.indptr[v + 1]]
 
-    def adjacency_dense(self) -> np.ndarray:
-        a = np.zeros((self.n, self.n), dtype=bool)
-        a[self.edges[:, 0], self.edges[:, 1]] = True
-        a[self.edges[:, 1], self.edges[:, 0]] = True
+    def adjacency_dense(self, dtype=bool) -> np.ndarray:
+        """Dense adjacency, cached per dtype (used by the GEMM engines)."""
+        key = ("adj", np.dtype(dtype).str)
+        a = self._struct_cache.get(key)
+        if a is None:
+            a = np.zeros((self.n, self.n), dtype=dtype)
+            one = True if np.dtype(dtype) == bool else 1
+            a[self.edges[:, 0], self.edges[:, 1]] = one
+            a[self.edges[:, 1], self.edges[:, 0]] = one
+            self._struct_cache[key] = a
         return a
+
+    # ---- cached structure ----
+    def bipartition(self) -> np.ndarray | None:
+        """2-coloring side[v] in {0,1} if the graph is bipartite, else None.
+
+        Works per connected component (BFS parity).  The utilization engine
+        uses this to run its GEMMs on the half-size biadjacency blocks.
+        """
+        if "bip" not in self._struct_cache:
+            side = np.full(self.n, -1, dtype=np.int8)
+            for start in range(self.n):
+                if side[start] >= 0:
+                    continue
+                dist = bfs_distances(self, start)
+                comp = dist >= 0
+                side[comp] = (dist[comp] % 2).astype(np.int8)
+            u, v = self.edges[:, 0], self.edges[:, 1]
+            ok = bool((side[u] != side[v]).all()) if self.num_edges else True
+            self._struct_cache["bip"] = side if ok else None
+        return self._struct_cache["bip"]
+
+    def arc_sort_by_pair(self) -> tuple[np.ndarray, np.ndarray]:
+        """(order, keys): arc ids sorted by (src, dst) and the sorted packed
+        keys src*n + dst — a vectorized arc-id lookup table."""
+        if "pairsort" not in self._struct_cache:
+            keys = self.arc_src * np.int64(self.n) + self.indices
+            order = np.argsort(keys, kind="stable")
+            self._struct_cache["pairsort"] = (order, keys[order])
+        return self._struct_cache["pairsort"]
+
+    def reverse_arcs(self) -> np.ndarray:
+        """rev[k] = arc id of (v -> u) for arc k = (u -> v)."""
+        if "revarc" not in self._struct_cache:
+            order, keys = self.arc_sort_by_pair()
+            qkeys = self.indices * np.int64(self.n) + self.arc_src
+            self._struct_cache["revarc"] = order[np.searchsorted(keys, qkeys)]
+        return self._struct_cache["revarc"]
+
+    def arcs_by_dst(self) -> np.ndarray:
+        """Arc ids sorted by destination; group v occupies
+        indptr[v]:indptr[v+1] (in-degree equals degree, graph undirected)."""
+        if "dstsort" not in self._struct_cache:
+            self._struct_cache["dstsort"] = np.argsort(self.indices, kind="stable")
+        return self._struct_cache["dstsort"]
 
     # ---- distances ----
     def distances_from(self, source: int) -> np.ndarray:
@@ -136,6 +209,79 @@ def _gather_neighbors(g: Graph, frontier: np.ndarray) -> np.ndarray:
     return g.indices[idx]
 
 
+def bfs_distances_batched(g: Graph, sources, block: int = 0) -> np.ndarray:
+    """Level-synchronous BFS from a block of sources at once: (S, N) int16,
+    -1 for unreachable.  Dense-GEMM frontier advance for small graphs, CSR
+    reduceat sweep for large ones; chunks sources to bound memory."""
+    sources = np.asarray(sources, dtype=np.int64)
+    s_tot = len(sources)
+    out = np.empty((s_tot, g.n), dtype=np.int16)
+    if block <= 0:
+        block = _bfs_block_rows(g.n)
+    for lo in range(0, s_tot, block):
+        chunk = sources[lo : lo + block]
+        if g.n <= _dense_max_n():
+            out[lo : lo + block] = _bfs_block_dense(g, chunk)
+        else:
+            out[lo : lo + block] = _bfs_block_csr(g, chunk)
+    return out
+
+
+def _bfs_block_rows(n: int) -> int:
+    # ~64 MB of float32 frontier per chunk on the dense path
+    return max(32, (64 << 20) // max(4 * n, 1))
+
+
+def _bfs_block_dense(g: Graph, sources: np.ndarray) -> np.ndarray:
+    a32 = g.adjacency_dense(np.float32)
+    s = len(sources)
+    rows = np.arange(s)
+    dist = np.full((s, g.n), -1, dtype=np.int16)
+    dist[rows, sources] = 0
+    frontier = np.zeros((s, g.n), dtype=np.float32)
+    frontier[rows, sources] = 1.0
+    reached = dist >= 0
+    lvl = 0
+    while True:
+        lvl += 1
+        new = (frontier @ a32 > 0) & ~reached
+        if not new.any():
+            return dist
+        dist[new] = lvl
+        reached |= new
+        frontier = new.astype(np.float32)
+
+
+def _bfs_block_csr(g: Graph, sources: np.ndarray) -> np.ndarray:
+    """Transposed (N, S) layout: the (A, S) per-level gather is then a
+    contiguous row copy, and logical_or.reduceat collapses arcs into their
+    destination groups (arcs sorted by dst share indptr with the CSR)."""
+    s = len(sources)
+    dist_t = np.full((g.n, s), -1, dtype=np.int16)
+    dist_t[sources, np.arange(s)] = 0
+    n_arcs = len(g.arc_src)
+    if n_arcs == 0:
+        return np.ascontiguousarray(dist_t.T)
+    rows_by_dst = g.arc_src[g.arcs_by_dst()]
+    # trailing degree-0 vertices would put an offset == n_arcs into
+    # reduceat, which rejects it; clip and overwrite their rows below
+    starts = np.minimum(g.indptr[:-1], n_arcs - 1)
+    deg0 = g.degrees == 0
+    frontier_t = np.zeros((g.n, s), dtype=bool)
+    frontier_t[sources, np.arange(s)] = True
+    lvl = 0
+    while True:
+        lvl += 1
+        red = np.logical_or.reduceat(frontier_t[rows_by_dst], starts, axis=0)
+        if deg0.any():
+            red[deg0] = False  # reduceat repeats offsets for empty groups
+        new = red & (dist_t < 0)
+        if not new.any():
+            return np.ascontiguousarray(dist_t.T)
+        dist_t[new] = lvl
+        frontier_t = new
+
+
 def distance_distribution(g: Graph, sources=None) -> np.ndarray:
     """W(t): number of ordered (s, t != s) pairs at distance t, averaged over
     the chosen sources (all vertices by default) so W(t) is 'per vertex' —
@@ -147,18 +293,17 @@ def distance_distribution(g: Graph, sources=None) -> np.ndarray:
     if sources is None:
         sources = np.arange(g.n)
     sources = np.asarray(sources, dtype=np.int64)
-    counts: list[np.ndarray] = []
-    maxd = 0
+    # stream source blocks so memory stays O(N * block), not O(N^2)
+    block = _bfs_block_rows(g.n)
     acc = np.zeros(1, dtype=np.float64)
-    for s in sources:
-        dist = bfs_distances(g, int(s))
+    for lo in range(0, len(sources), block):
+        dist = bfs_distances_batched(g, sources[lo : lo + block], block=block)
         if (dist < 0).any():
             raise ValueError("graph is disconnected")
-        w = np.bincount(dist)
+        w = np.bincount(dist.ravel().astype(np.int64))
         if len(w) > len(acc):
             acc = np.pad(acc, (0, len(w) - len(acc)))
         acc[: len(w)] += w
-        maxd = max(maxd, len(w) - 1)
     acc /= len(sources)
     acc[0] = 1.0
-    return acc[: maxd + 1]
+    return acc

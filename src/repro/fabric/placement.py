@@ -26,7 +26,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core import Graph
-from ..core.graph import bfs_distances
+from ..core.graph import bfs_distances_batched
 
 __all__ = ["Placement", "place_mesh", "collective_traffic", "link_loads",
            "greedy_improve", "evaluate_placements"]
@@ -117,7 +117,7 @@ def link_loads(p: Placement, traffic) -> dict:
     key = rs * g.n + rd
     agg = np.zeros(g.n * g.n)
     np.add.at(agg, key, byts)
-    dist = np.stack([bfs_distances(g, s) for s in range(g.n)])
+    dist = bfs_distances_batched(g, np.arange(g.n)).astype(np.int64)
     arc_load = np.zeros(len(g.indices))
     for s in range(g.n):
         demand = agg[s * g.n: (s + 1) * g.n].copy()

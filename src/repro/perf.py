@@ -22,6 +22,34 @@ Flags:
   microbatch=N  — grad-accumulation over N microbatches inside the train
                   step (activation temp ÷ N; grads reduced once).
   opt_all       — shorthand for every boolean flag above.
+
+Topology-analytics flags (the batched all-source BFS/Brandes engine behind
+``repro.core.utilization``):
+  util_engine=NAME — which arc-load engine to use: ``auto`` (default),
+                  ``naive`` (the per-source reference loops), ``numpy``
+                  (batched level-synchronous GEMM engine; bipartite graphs
+                  run on half-size biadjacency blocks, graphs beyond
+                  util_dense_max fall back to a CSR reduceat sweep),
+                  ``csr`` (force the sparse sweep), ``jax`` (jnp GEMMs,
+                  jit-compiled, chunked over source blocks), or ``orbit``
+                  (force the automorphism shortcut; errors if the family
+                  has no known generators).
+  util_orbits=0 — disable the orbit shortcut inside ``auto``.  The
+                  shortcut runs one Brandes sweep per automorphism vertex
+                  orbit (1–2 for PN/demi-PN/MMS/Hamming, 2 for OFT column
+                  symmetry) and reconstructs exact per-arc loads from
+                  arc-orbit averages; it is exact, not approximate — this
+                  flag exists to measure the exact engines.
+  util_dense_max=N — largest vertex count that uses dense (N, N)
+                  adjacency GEMMs (default 6144); beyond it auto prefers
+                  jax (if importable, up to util_jax_max) then CSR.
+  util_jax_max=N — largest vertex count auto will hand to the jax dense
+                  engine (default 12288).
+  util_block=N  — source-block row count for the batched engines
+                  (0 = size blocks to ~48 MB of working set).
+
+e.g. ``REPRO_PERF="util_engine=naive" python -m benchmarks.run`` times the
+paper tables on the reference implementation.
 """
 
 from __future__ import annotations
@@ -66,6 +94,25 @@ class PerfFlags:
     # GSPMD can only do by full replication (observed on mamba2: 382 GB/dev
     # all-gather).  Replicated weights make those blocks pure local DP.
     replicate_ff: bool = False
+    # Arc-load engine selection for repro.core.utilization (see module
+    # docstring): auto | naive | numpy | csr | jax | orbit.
+    util_engine: str = "auto"
+    # Let `auto` use the automorphism-orbit shortcut (exact; one Brandes
+    # sweep per vertex orbit instead of per vertex).
+    util_orbits: bool = True
+    # Size thresholds for auto's exact-engine choice.
+    util_dense_max: int = 6144
+    util_jax_max: int = 12288
+    # Source-block rows for the batched engines (0 = auto ~48 MB blocks).
+    util_block: int = 0
+    # BLAS threads while inside the dense engines (0 = leave the pool
+    # alone).  The per-level GEMMs are a few hundred rows square, where
+    # OpenBLAS threading measures 3-4x SLOWER than one core.
+    util_blas_threads: int = 1
+    # Python threads running independent source-block sweeps (numpy
+    # releases the GIL in GEMM/ufunc loops, so 2 single-BLAS-thread sweeps
+    # overlap ~perfectly on 2 cores).  1 = sequential.
+    util_workers: int = 2
 
 
 _FLAGS = PerfFlags()
@@ -92,7 +139,11 @@ def from_env(env: str | None = None) -> PerfFlags:
                       moe_3d=True)
         elif "=" in tok:
             k, v = tok.split("=", 1)
-            set_flags(**{k: int(v)})
+            try:
+                val: int | str = int(v)
+            except ValueError:
+                val = v  # string-valued flags, e.g. util_engine=numpy
+            set_flags(**{k: val})
         else:
             set_flags(**{tok: True})
     return _FLAGS

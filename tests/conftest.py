@@ -1,0 +1,81 @@
+"""Shared test configuration.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt).  Four
+modules import it at module level; to keep the suite *collectable* on a
+bare interpreter we install a minimal stand-in into ``sys.modules`` before
+those modules are imported.  Property tests then skip at call time instead
+of erroring the whole collection.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+import pytest
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Stand-in for strategy objects; tolerates any call/attr/operator."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def map(self, fn):
+            return self
+
+        def filter(self, fn):
+            return self
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            def skipper(*_aa, **_kk):
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            # keep pytest marks (e.g. parametrize) applied below @given
+            skipper.pytestmark = getattr(fn, "pytestmark", [])
+            return skipper
+
+        return deco
+
+    class _Settings:
+        """Accepts both ``@settings(...)`` and ``settings.register_profile``."""
+
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*a, **k):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **k):
+            pass
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.assume = lambda *a, **k: True
+    _hyp.note = lambda *a, **k: None
+    _hyp.example = lambda *a, **k: (lambda fn: fn)
+    _hyp.HealthCheck = _Strategy()
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _Strategy()
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

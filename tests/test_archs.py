@@ -9,6 +9,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_arch
+
+# Heavyweight JAX suite: excluded from tier-1 (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
 from repro.models import build, unbox
 from repro.models.transformer import forward
 

@@ -8,6 +8,10 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# Heavyweight JAX suite: excluded from tier-1 (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
+
 rng = np.random.default_rng(42)
 
 

@@ -82,6 +82,7 @@ def test_bf16_experts_matches_fp32_path():
     assert float(aux_b) == pytest.approx(float(aux_o), rel=1e-5)
 
 
+@pytest.mark.slow
 def test_microbatch_grad_accumulation_parity():
     from repro.configs import get_arch
     from repro.launch.mesh import make_host_mesh
@@ -104,6 +105,7 @@ def test_microbatch_grad_accumulation_parity():
     assert losses[1] == pytest.approx(losses[4], rel=2e-4), losses
 
 
+@pytest.mark.slow
 def test_moe_3d_matches_2d_dispatch():
     """moe_3d regroups tokens per device but must route every token to the
     same experts; with ample capacity (no drops) outputs are identical."""

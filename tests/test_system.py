@@ -15,6 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Heavyweight end-to-end suite (AOT compiles, subprocesses): excluded
+# from tier-1 (see pyproject.toml)
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 

@@ -1,0 +1,204 @@
+"""Parity of the batched arc-load engines against the naive reference.
+
+The batched engines (numpy dense generic / dense bipartite / CSR, jax,
+orbit shortcut) must reproduce the naive per-source Brandes accumulation
+to float64 round-off on every family the paper uses, including the
+leaf-restricted indirect networks."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    bfs_distances,
+    bfs_distances_batched,
+    complete_bipartite_graph,
+    complete_graph,
+    demi_pn_graph,
+    distance_distribution,
+    hamming_graph,
+    hypercube_graph,
+    mlfm_graph,
+    mms_graph,
+    oft_graph,
+    orbit_info,
+    paley_graph,
+    pn_graph,
+    turan_graph,
+    utilization,
+)
+from repro.core.utilization import arc_loads
+
+FAMILIES = [
+    lambda: pn_graph(8),            # bipartite fast path, diameter 3
+    lambda: demi_pn_graph(9),       # dense generic
+    lambda: oft_graph(4),           # bipartite + leaf mask (below)
+    lambda: mlfm_graph(5),          # bipartite indirect
+    lambda: mms_graph(9),           # dense generic, 2 orbits
+    lambda: hamming_graph(5, 2),    # vertex-transitive, non-bipartite
+    lambda: hypercube_graph(5),     # bipartite, diameter 5, sigma > 1
+    lambda: turan_graph(10, 3),     # no known automorphism generators
+]
+
+
+def _ring(n):
+    e = np.stack([np.arange(n), (np.arange(n) + 1) % n], axis=1)
+    return Graph(n, e, name=f"ring{n}")
+
+
+@pytest.mark.parametrize("build", FAMILIES)
+@pytest.mark.parametrize("engine", ["numpy", "csr", "auto"])
+def test_engine_parity_vs_naive(build, engine):
+    g = build()
+    tm = g.meta.get("leaf_mask")
+    ref_loads, ref_kbar, ref_diam = arc_loads(g, targets_mask=tm, engine="naive")
+    loads, kbar, diam = arc_loads(g, targets_mask=tm, engine=engine)
+    np.testing.assert_allclose(loads, ref_loads, rtol=1e-9, atol=1e-9)
+    assert kbar == pytest.approx(ref_kbar, abs=1e-12)
+    assert diam == ref_diam
+
+
+@pytest.mark.parametrize("n", [12, 13])  # even ring = bipartite, odd = not
+def test_engine_parity_deep_diameter(n):
+    g = _ring(n)
+    ref = arc_loads(g, engine="naive")
+    for engine in ["numpy", "csr"]:
+        got = arc_loads(g, engine=engine)
+        np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+        assert got[2] == ref[2]
+
+
+@pytest.mark.parametrize("build", [
+    lambda: pn_graph(8), lambda: demi_pn_graph(9), lambda: oft_graph(4),
+    lambda: mlfm_graph(5), lambda: mms_graph(9), lambda: hamming_graph(5, 2),
+])
+def test_orbit_engine_parity(build):
+    g = build()
+    tm = g.meta.get("leaf_mask")
+    ref = arc_loads(g, targets_mask=tm, engine="naive")
+    got = arc_loads(g, targets_mask=tm, engine="orbit")
+    np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+    assert got[1] == pytest.approx(ref[1], abs=1e-12)
+    assert got[2] == ref[2]
+
+
+def test_orbit_engine_rejects_unknown_family():
+    with pytest.raises(ValueError, match="automorphism"):
+        arc_loads(turan_graph(10, 3), engine="orbit")
+
+
+def test_orbit_counts_match_theory():
+    # PN is vertex- and arc-transitive (PGL + point-line duality);
+    # demi-PN has the 3 PGO orbits (isotropic + two norm classes);
+    # OFT has the leaf/spine column symmetry the paper leans on.
+    assert orbit_info(pn_graph(8)).n_vertex_orbits == 1
+    assert len(orbit_info(pn_graph(8)).arc_sizes) == 1
+    assert orbit_info(demi_pn_graph(9)).n_vertex_orbits == 3
+    assert orbit_info(oft_graph(4)).n_vertex_orbits == 2
+    assert orbit_info(mms_graph(9)).n_vertex_orbits == 2
+    assert orbit_info(hamming_graph(5, 2)).n_vertex_orbits == 1
+
+
+def test_jax_engine_parity():
+    jax = pytest.importorskip("jax")
+    del jax
+    for g in [pn_graph(5), hypercube_graph(4)]:
+        ref = arc_loads(g, engine="naive")
+        got = arc_loads(g, engine="jax")
+        np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+        assert got[2] == ref[2]
+
+
+def test_disconnected_graph_raises():
+    g = Graph(4, np.array([[0, 1], [2, 3]]))
+    for engine in ["naive", "numpy", "csr", "auto"]:
+        with pytest.raises(ValueError, match="disconnected"):
+            arc_loads(g, engine=engine)
+
+
+def test_trailing_isolated_vertex():
+    """A degree-0 vertex with the highest index must report unreachable
+    (-1), not crash the CSR reduceat sweep (offset == n_arcs)."""
+    import repro.core.graph as graph_mod
+    g = Graph(4, np.array([[0, 1], [1, 2]]))  # vertex 3 isolated
+    dist = graph_mod._bfs_block_csr(g, np.array([0]))
+    np.testing.assert_array_equal(dist[0], [0, 1, 2, -1])
+    with pytest.raises(ValueError, match="disconnected"):
+        arc_loads(g, engine="csr")
+
+
+def test_oft_leaf_restricted_targets_mask():
+    """Section 6: OFT traffic restricted to leaves gives u = 1, kbar = 2,
+    identically across engines — including the orbit shortcut, which must
+    use only mask-preserving automorphisms."""
+    g = oft_graph(4)
+    leaf = g.meta["leaf_mask"]
+    ref = arc_loads(g, targets_mask=leaf, engine="naive")
+    for engine in ["numpy", "csr", "orbit", "auto"]:
+        loads, kbar, diam = arc_loads(g, targets_mask=leaf, engine=engine)
+        np.testing.assert_allclose(loads, ref[0], rtol=1e-9, atol=1e-9)
+        assert kbar == pytest.approx(2.0)
+        assert diam == 2
+    rep = utilization(g)  # leaf_mask picked up from meta
+    assert rep.u == pytest.approx(1.0, abs=1e-10)
+
+
+def test_explicit_sources_subset_parity():
+    g = demi_pn_graph(8)
+    srcs = np.array([0, 3, 17, 40])
+    ref = arc_loads(g, sources=srcs, engine="naive")
+    for engine in ["numpy", "csr", "auto"]:
+        got = arc_loads(g, sources=srcs, engine=engine)
+        np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+        assert got[1] == pytest.approx(ref[1], abs=1e-12)
+
+
+def test_engine_flag_selection():
+    from repro import perf
+    g = pn_graph(4)
+    ref = arc_loads(g, engine="naive")
+    old = perf.flags().util_engine
+    try:
+        perf.set_flags(util_engine="numpy")
+        got = arc_loads(g)  # no explicit engine: flag applies
+        np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+        with pytest.raises(ValueError, match="unknown engine"):
+            arc_loads(g, engine="warp-drive")
+    finally:
+        perf.set_flags(util_engine=old)
+
+
+def test_batched_bfs_matches_single_source():
+    for g in [pn_graph(5), mms_graph(9), _ring(13)]:
+        dist = bfs_distances_batched(g, np.arange(g.n))
+        for s in range(0, g.n, max(1, g.n // 7)):
+            np.testing.assert_array_equal(dist[s], bfs_distances(g, s))
+
+
+def test_batched_bfs_csr_path():
+    """Force the CSR sweep (used beyond util_dense_max) on a small graph."""
+    import repro.core.graph as graph_mod
+    g = mms_graph(9)
+    dense = bfs_distances_batched(g, np.arange(g.n))
+    sparse = np.vstack([graph_mod._bfs_block_csr(g, np.arange(g.n))])
+    np.testing.assert_array_equal(dense, sparse)
+
+
+def test_distance_distribution_consistency():
+    g = demi_pn_graph(9)
+    w = distance_distribution(g)
+    assert w[0] == 1.0
+    # demi-PN(q) is diameter 2 with N-1 reachable peers per vertex
+    assert len(w) == 3
+    assert w[1] + w[2] == pytest.approx(g.n - 1)
+    # vertex-transitive family: single-source distribution is exact
+    h = hamming_graph(5, 2)
+    np.testing.assert_allclose(distance_distribution(h, [0]),
+                               distance_distribution(h), rtol=1e-9)
+
+
+def test_loads_conservation_across_engines():
+    g = mms_graph(9)
+    for engine in ["numpy", "orbit"]:
+        loads, kbar, _ = arc_loads(g, engine=engine)
+        assert loads.sum() == pytest.approx(kbar * g.n * (g.n - 1))
