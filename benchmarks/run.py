@@ -39,8 +39,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write per-entry wall time + max_rel_err as JSON")
-    ap.add_argument("--only", choices=["tables", "figures", "all"], default="all",
-                    help="restrict to the paper tables or figures")
+    ap.add_argument("--only", choices=["tables", "figures", "traffic", "all"],
+                    default="all",
+                    help="restrict to the paper tables, figures, or the "
+                         "traffic-pattern saturation sweep")
     args = ap.parse_args(argv)
 
     from . import paper_tables as tabs
@@ -51,6 +53,18 @@ def main(argv=None) -> None:
         for name, fn in tabs.TABLES.items():
             _run(records, name, fn, lambda o: f"max_err={o[1]:.4f}",
                  err_of=lambda o: o[1])
+
+    if args.only in ("traffic", "all"):
+        from . import traffic as traf
+
+        for case_name, g in traf.traffic_cases():
+            out = _run(records, f"traffic[{case_name}]",
+                       lambda g=g: traf.traffic_one(g),
+                       lambda o: (f"min_theta={o[1]['minimal']['min_theta']:.4f}"
+                                  f"@{o[1]['minimal']['worst_pattern']}"
+                                  f" valiant={o[1]['valiant']['min_theta']:.4f}"))
+            records[-1]["patterns"] = out[0]
+            records[-1]["summary"] = out[1]
 
     if args.only in ("figures", "all"):
         from . import paper_figures as figs

@@ -1,0 +1,46 @@
+"""Traffic-pattern saturation benchmarks: the paper's balance claim under
+stress.
+
+For each case-study topology (PN, OFT leaf-restricted, 3D torus, dragonfly)
+run the default pattern sweep under minimal and Valiant routing and record
+theta = 1/max_load (per-node saturation injection, link-equivalents) and
+u = mean/max.  The headline number per topology is the worst-case minimal-
+routing theta over patterns — the throughput guarantee a scheduler can
+count on without randomized routing.
+"""
+
+from __future__ import annotations
+
+from repro.core import pn_graph, oft_graph
+from repro.core.reference import dragonfly_graph
+from repro.core.traffic import DEFAULT_SWEEP, saturation_sweep
+from repro.fabric.model import torus3d_graph
+
+
+def traffic_cases():
+    return [
+        ("pn16", pn_graph(16)),
+        ("oft4", oft_graph(4)),           # leaf-restricted (Section 6)
+        ("torus3d_444", torus3d_graph(4, 4, 4)),
+        ("dragonfly3", dragonfly_graph(3)),
+    ]
+
+
+def traffic_one(g, patterns=DEFAULT_SWEEP):
+    """(per-(pattern, routing) rows, summary) for one topology."""
+    reports, summary = saturation_sweep(g, patterns=patterns)
+    rows = [{"pattern": r.pattern, "routing": r.routing,
+             "theta": round(r.theta, 6), "u": round(r.u, 6),
+             "kbar_eff": round(r.kbar_eff, 4)} for r in reports]
+    return rows, summary
+
+
+def traffic_suite(patterns=DEFAULT_SWEEP):
+    out = {}
+    for name, g in traffic_cases():
+        rows, summary = traffic_one(g, patterns)
+        out[name] = {"n": g.n, "rows": rows,
+                     "min_theta_minimal": summary["minimal"]["min_theta"],
+                     "worst_pattern": summary["minimal"]["worst_pattern"],
+                     "valiant_guarantee": summary["valiant"]["min_theta"]}
+    return out

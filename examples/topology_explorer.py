@@ -1,23 +1,29 @@
 """Topology explorer: build any of the paper's graphs, measure it exactly,
-and price it with the Section-5 cost model.
+price it with the Section-5 cost model, and stress it with traffic patterns.
 
 Examples:
   PYTHONPATH=src python examples/topology_explorer.py --topology demi_pn --param 27
   PYTHONPATH=src python examples/topology_explorer.py --topology mms --param 19
   PYTHONPATH=src python examples/topology_explorer.py --compare 10000 --radix 48
+  PYTHONPATH=src python examples/topology_explorer.py --topology pn --param 8 \\
+      --patterns "uniform,tornado,bit_reversal,hot_region(0.2,4)"
 """
 
 import argparse
+import re
 
 from repro.core import (DirectNetworkSpec, build_topology, cable_split,
-                        dollars_per_node, electrical_groups, utilization,
-                        watts_per_node)
+                        dollars_per_node, electrical_groups, saturation_report,
+                        utilization, watts_per_node)
+from repro.core.traffic import DEFAULT_SWEEP
 from repro.core.moore import min_kbar, moore_bound
 from repro.core.registry import TOPOLOGIES
 from repro.core.select import select_topology
 
 
 def inspect(name: str, param: int, delta0: float | None):
+    """Prints the instance summary; returns the built graph (with its
+    warmed structure cache) for further analysis."""
     g = build_topology(name, param)
     rep = utilization(g)
     print(f"{g.name}: N={g.n} |E|={g.num_edges} "
@@ -56,6 +62,19 @@ def inspect(name: str, param: int, delta0: float | None):
           f"R={spec.radix}  cables: {ne} electrical / {no} optical")
     print(f"  cost model:  {dollars_per_node(spec):8.2f} $/node   "
           f"{watts_per_node(spec):5.2f} W/node")
+    return g
+
+
+def patterns_table(g, specs):
+    print(f"{g.name}: saturation throughput theta (per-node injection, "
+          f"link-equivalents) and balance u by pattern")
+    print(f"{'pattern':28s} {'theta_min':>9s} {'u_min':>7s} "
+          f"{'theta_val':>9s} {'u_val':>7s} {'kbar_eff':>8s}")
+    for spec in specs:
+        rmin = saturation_report(g, spec, routing="minimal")
+        rval = saturation_report(g, spec, routing="valiant")
+        print(f"{rmin.pattern:28s} {rmin.theta:9.4f} {rmin.u:7.4f} "
+              f"{rval.theta:9.4f} {rval.u:7.4f} {rmin.kbar_eff:8.4f}")
 
 
 def compare(terminals: int, radix: int):
@@ -76,9 +95,20 @@ def main():
     ap.add_argument("--compare", type=int, default=None,
                     help="terminal count to run the Section-5 selector for")
     ap.add_argument("--radix", type=int, default=48)
+    ap.add_argument("--patterns", nargs="?", const=",".join(DEFAULT_SWEEP),
+                    default=None, metavar="SPECS",
+                    help="comma-separated traffic patterns to stress the "
+                         "topology with (default sweep when bare); e.g. "
+                         "'uniform,tornado,hot_region(0.2,4)'")
     args = ap.parse_args()
     if args.topology:
-        inspect(args.topology, args.param, args.delta0)
+        g = inspect(args.topology, args.param, args.delta0)
+        if args.patterns:
+            print()
+            # split on commas outside parentheses: hot_region(0.2,4) is one spec
+            specs = [s.strip() for s in
+                     re.split(r",(?![^(]*\))", args.patterns) if s.strip()]
+            patterns_table(g, specs)
     if args.compare:
         compare(args.compare, args.radix)
     if not args.topology and not args.compare:

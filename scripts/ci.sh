@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 validation + a bounded smoke slice of the slow
+# JAX suites + the benchmark JSON artifact.
+#
+#   scripts/ci.sh            # tier-1 + slow smoke + BENCH_2.json
+#   scripts/ci.sh --fast     # tier-1 only
+#
+# The slow smoke subset pins ONE pallas kernel shape and ONE multi-device
+# system config so regressions in the heavyweight paths surface without
+# paying for the full sweep (`pytest -m slow` runs everything).  Each
+# phase runs under `timeout` so a wedged XLA compile fails the build
+# instead of hanging it.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+TIER1_BUDGET="${CI_TIER1_BUDGET:-600}"     # seconds
+SLOW_BUDGET="${CI_SLOW_BUDGET:-600}"       # seconds
+BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"     # seconds
+
+echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
+timeout "$TIER1_BUDGET" python -m pytest -x -q
+
+if [[ "${1:-}" == "--fast" ]]; then
+    echo "== done (fast mode: slow smoke + bench skipped) =="
+    exit 0
+fi
+
+echo "== slow smoke subset (budget ${SLOW_BUDGET}s) =="
+# one pallas kernel shape (fwd + bwd) and one multi-device system config
+timeout "$SLOW_BUDGET" python -m pytest -q -m slow \
+    "tests/test_kernels.py::test_attention_pallas_interpret_vs_ref[float32-case0]" \
+    "tests/test_kernels.py::test_flash_attention_backward_interpret_vs_ref[case0]" \
+    "tests/test_kernels.py::test_ssd_pallas_interpret_vs_ref[case0]" \
+    "tests/test_system.py::test_zero1_single_device_parity"
+
+echo "== benchmarks: paper tables + traffic sweep -> BENCH_2.json (budget ${BENCH_BUDGET}s) =="
+timeout "$BENCH_BUDGET" python -m benchmarks.run --json BENCH_2.json --only tables
+timeout "$BENCH_BUDGET" python -m benchmarks.run --json BENCH_2_traffic.json --only traffic
+python - <<'EOF'
+import json
+tables = json.load(open("BENCH_2.json"))
+traffic = json.load(open("BENCH_2_traffic.json"))
+tables["entries"] += traffic["entries"]
+tables["total_seconds"] = round(tables["total_seconds"]
+                                + traffic["total_seconds"], 6)
+json.dump(tables, open("BENCH_2.json", "w"), indent=2)
+import os; os.remove("BENCH_2_traffic.json")
+errs = [e for e in tables["entries"] if e.get("max_rel_err", 0) > 0.25]
+assert not errs, f"paper reproduction drifted: {errs}"
+print(f"BENCH_2.json: {len(tables['entries'])} entries, "
+      f"{tables['total_seconds']:.1f}s total")
+EOF
+
+echo "== ci.sh green =="

@@ -40,6 +40,22 @@ from .reference import (
 )
 from .registry import TOPOLOGIES, build_topology
 from .select import Realization, all_realizations, realizations_for_family, select_topology
-from .utilization import UtilizationReport, arc_loads, utilization, valiant_report
+from .traffic import (
+    DEFAULT_SWEEP,
+    PATTERNS,
+    SaturationReport,
+    TrafficPattern,
+    make_pattern,
+    register_pattern,
+    saturation_report,
+    saturation_sweep,
+)
+from .utilization import (
+    UtilizationReport,
+    arc_loads,
+    arc_loads_weighted,
+    utilization,
+    valiant_report,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,380 @@
+"""Traffic patterns and saturation analysis — the demand-matrix view of
+Theorem 3.9.
+
+The paper's utilization u = mean/max arc load is defined for UNIFORM
+all-to-all traffic; its balance argument ("symmetric networks keep every
+link equally busy, so Eq. 1's a = Δ·u/k̄ is achievable") only bites when
+competing topologies are stressed with the traffic that unbalances them.
+This module states the general problem: a traffic matrix D[s, t] gives the
+demand each source injects for each target, split evenly across all
+shortest paths (or routed through Valiant intermediates), and the engines
+of repro.core.utilization accumulate the per-arc load L_a:
+
+    L_a = sum_{s,t} D[s,t] · (# shortest s->t paths through a) / (# s->t paths)
+
+Normalizing D so the busiest source injects 1 unit, the saturation
+throughput is theta = 1 / max_a L_a — the fraction of one link's bandwidth
+every node can sustainably inject under that pattern.  For uniform traffic
+theta IS Eq. 1's a = Δ·u/k̄; for adversarial patterns (tornado shifts,
+bit-reversal, hot regions) theta collapses on asymmetric topologies while
+the paper's PN/demi-PN families, being arc-transitive, degrade gracefully
+— and Valiant routing [paper ref 40] buys back worst-case guarantees at
+half the uniform throughput.
+
+Patterns are registered in ``PATTERNS`` and built by name (with optional
+``name(arg, ...)`` parameters) via :func:`make_pattern`:
+
+  uniform             all-to-all, 1 unit per ordered pair
+  bit_reversal        rank i -> bit-reversed rank (FFT / transpose phases)
+  transpose           (r, c) -> (c, r) on the largest square rank grid
+  shift(k)            rank i -> i+k mod m (neighbor exchange; halo phases)
+  tornado             shift by m//2 — the classic torus worst case
+  random_permutation(seed)  a sampled permutation (Valiant's average case)
+  hot_region(frac, boost)   all-to-all with a boosted hot target region
+  collective(op)      demand of one fabric collective (see below)
+
+``collective`` derives its matrix from the schedules fabric.collectives
+prices: spread ops (``all-to-all``, ``all-gather``, ``reduce-scatter``,
+``all-reduce``) send each node's bytes uniformly to all peers, while the
+``ring-*`` variants serialize the same bytes over the rank-ring shift
+permutation — which is exactly how a DC ring all-reduce turns a balanced
+topology into a single hot cycle.
+
+``saturation_report(g, pattern, routing=...)`` evaluates one pattern;
+``saturation_sweep`` runs a battery and reports the worst case — the
+quantitative form of the paper's "suboptimal designs" claim.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .graph import Graph
+from .utilization import arc_loads_weighted
+
+__all__ = [
+    "TrafficPattern", "PATTERNS", "register_pattern", "make_pattern",
+    "SaturationReport", "saturation_report", "saturation_sweep",
+    "DEFAULT_SWEEP", "COLLECTIVE_OPS",
+]
+
+
+# ---------------------------------------------------------------------------
+# Pattern objects and registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrafficPattern:
+    """A named recipe producing a demand matrix for any graph.
+
+    ``builder(g, active)`` receives the graph and the sorted vertex ids
+    that send/receive traffic (all vertices, or the leaf set of an
+    indirect network) and returns a dense (N, N) float64 demand matrix.
+    """
+
+    name: str
+    builder: Callable[[Graph, np.ndarray], np.ndarray] = field(repr=False)
+    description: str = ""
+
+    def demand(self, g: Graph, targets_mask: np.ndarray | None = None) -> np.ndarray:
+        if targets_mask is None:
+            targets_mask = g.meta.get("leaf_mask")
+        if targets_mask is None:
+            active = np.arange(g.n)
+        else:
+            active = np.nonzero(np.asarray(targets_mask, dtype=bool))[0]
+        if len(active) < 2:
+            raise ValueError("need at least 2 active vertices")
+        d = self.builder(g, active)
+        np.fill_diagonal(d, 0.0)
+        return d
+
+
+PATTERNS: dict[str, Callable[..., TrafficPattern]] = {}
+
+
+def register_pattern(name: str):
+    """Register a pattern factory: ``fn(*args) -> TrafficPattern``."""
+
+    def deco(fn):
+        PATTERNS[name] = fn
+        return fn
+
+    return deco
+
+
+def _perm_demand(n: int, active: np.ndarray, perm: np.ndarray,
+                 weight: float = 1.0) -> np.ndarray:
+    """Demand matrix for rank permutation ``perm`` over the active set.
+    Fixed points become self-demand and are zeroed by ``demand()``."""
+    d = np.zeros((n, n), dtype=np.float64)
+    d[active, active[perm]] = weight
+    return d
+
+
+@register_pattern("uniform")
+def _uniform() -> TrafficPattern:
+    def build(g, active):
+        d = np.zeros((g.n, g.n), dtype=np.float64)
+        d[np.ix_(active, active)] = 1.0
+        return d
+
+    return TrafficPattern("uniform", build, "all-to-all, 1 unit per ordered pair")
+
+
+@register_pattern("bit_reversal")
+def _bit_reversal() -> TrafficPattern:
+    def build(g, active):
+        m = len(active)
+        bits = max(1, (m - 1).bit_length())
+        i = np.arange(m)
+        rev = np.zeros(m, dtype=np.int64)
+        for b in range(bits):
+            rev |= ((i >> b) & 1) << (bits - 1 - b)
+        perm = np.where(rev < m, rev, i)  # out-of-range reversals stay home
+        return _perm_demand(g.n, active, perm)
+
+    return TrafficPattern("bit_reversal", build,
+                          "rank -> bit-reversed rank (FFT exchange phase)")
+
+
+@register_pattern("transpose")
+def _transpose() -> TrafficPattern:
+    def build(g, active):
+        m = len(active)
+        side = math.isqrt(m)
+        perm = np.arange(m)
+        sq = side * side
+        r, c = np.divmod(np.arange(sq), side)
+        perm[:sq] = c * side + r  # (r, c) -> (c, r); ranks beyond sq stay home
+        return _perm_demand(g.n, active, perm)
+
+    return TrafficPattern("transpose", build,
+                          "matrix transpose on the largest square rank grid")
+
+
+@register_pattern("shift")
+def _shift(k: int = 1) -> TrafficPattern:
+    def build(g, active):
+        m = len(active)
+        perm = (np.arange(m) + int(k)) % m
+        return _perm_demand(g.n, active, perm)
+
+    return TrafficPattern(f"shift({k})", build, f"rank i -> i+{k} mod m")
+
+
+@register_pattern("tornado")
+def _tornado() -> TrafficPattern:
+    def build(g, active):
+        m = len(active)
+        perm = (np.arange(m) + m // 2) % m
+        return _perm_demand(g.n, active, perm)
+
+    return TrafficPattern("tornado", build,
+                          "half-ring shift — the classic torus adversary")
+
+
+@register_pattern("random_permutation")
+def _random_permutation(seed: int = 0) -> TrafficPattern:
+    def build(g, active):
+        rng = np.random.default_rng(int(seed))
+        perm = rng.permutation(len(active))
+        return _perm_demand(g.n, active, perm)
+
+    return TrafficPattern(f"random_permutation({seed})", build,
+                          "a sampled rank permutation")
+
+
+@register_pattern("hot_region")
+def _hot_region(frac: float = 0.125, boost: float = 8.0) -> TrafficPattern:
+    if not 0.0 < frac < 1.0:
+        raise ValueError(f"frac must be in (0, 1), got {frac}")
+
+    def build(g, active):
+        m = len(active)
+        hot = active[: max(1, int(round(frac * m)))]
+        d = np.zeros((g.n, g.n), dtype=np.float64)
+        d[np.ix_(active, active)] = 1.0
+        d[np.ix_(active, hot)] = float(boost)
+        return d
+
+    return TrafficPattern(f"hot_region({frac},{boost})", build,
+                          f"all-to-all with a {boost}x-hot {frac:.0%} target region")
+
+
+COLLECTIVE_OPS = ("all-to-all", "all-gather", "reduce-scatter", "all-reduce",
+                  "ring-all-gather", "ring-reduce-scatter", "ring-all-reduce")
+
+
+@register_pattern("collective")
+def _collective(op: str = "all-reduce", bytes_global: float = 1.0) -> TrafficPattern:
+    """Demand matrix of one collective, matching fabric.collectives' byte
+    accounting: spread ops send ``bytes/m`` to every peer (their uniform-
+    destination schedule is the paper's uniform traffic); ring ops push the
+    same total around the rank ring, i.e. ``(m-1)/m · bytes`` (2x for
+    all-reduce) down each rank's shift(1) arc."""
+    if op not in COLLECTIVE_OPS:
+        raise ValueError(f"unknown collective {op!r}; options: {COLLECTIVE_OPS}")
+
+    def build(g, active):
+        m = len(active)
+        per_pair = float(bytes_global) / m
+        if op.startswith("ring-"):
+            phases = 2 * (m - 1) if op == "ring-all-reduce" else m - 1
+            perm = (np.arange(m) + 1) % m
+            return _perm_demand(g.n, active, perm, weight=phases * per_pair)
+        scale = 2.0 if op == "all-reduce" else 1.0  # rs + ag
+        d = np.zeros((g.n, g.n), dtype=np.float64)
+        d[np.ix_(active, active)] = scale * per_pair
+        return d
+
+    return TrafficPattern(f"collective({op})", build,
+                          f"one {op} of {bytes_global:g} bytes (global)")
+
+
+_SPEC_RE = re.compile(r"^\s*([A-Za-z_][A-Za-z0-9_-]*)\s*(?:\((.*)\))?\s*$")
+
+
+def make_pattern(spec) -> TrafficPattern:
+    """Build a pattern from a registry name with optional arguments:
+    ``"tornado"``, ``"shift(3)"``, ``"hot_region(0.2, 4)"``,
+    ``"collective(ring-all-reduce)"``.  Passes TrafficPattern through."""
+    if isinstance(spec, TrafficPattern):
+        return spec
+    m = _SPEC_RE.match(str(spec))
+    if not m or m.group(1) not in PATTERNS:
+        raise ValueError(f"unknown traffic pattern {spec!r}; "
+                         f"options: {sorted(PATTERNS)}")
+    name, argstr = m.group(1), m.group(2)
+    args = []
+    for tok in filter(None, (t.strip() for t in (argstr or "").split(","))):
+        try:
+            args.append(int(tok))
+        except ValueError:
+            try:
+                args.append(float(tok))
+            except ValueError:
+                args.append(tok)
+    return PATTERNS[name](*args)
+
+
+# ---------------------------------------------------------------------------
+# Saturation analysis
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SaturationReport:
+    """Load statistics of one (pattern, routing) on one graph.
+
+    Demand is normalized so the busiest source injects 1 unit; arcs have
+    unit capacity, so ``theta = 1/max_load`` is the per-node saturation
+    injection rate in link-equivalents (uniform: Eq. 1's a = Δ·u/k̄) and
+    ``u = mean/max`` is the paper's balance figure for this pattern."""
+
+    pattern: str
+    routing: str
+    theta: float
+    u: float
+    max_load: float
+    mean_load: float
+    kbar_eff: float  # demand-weighted hops (both phases under Valiant)
+    diameter: int    # longest hops traveled (Valiant: two-leg upper bound)
+    total_demand: float
+    loads: np.ndarray = field(repr=False)
+
+
+def _normalize_rows(demand: np.ndarray) -> np.ndarray:
+    peak = demand.sum(axis=1).max()
+    if peak <= 0:
+        raise ValueError("demand matrix is all zero")
+    return demand / peak
+
+
+def _valiant_demands(demand: np.ndarray, active: np.ndarray):
+    """Exact expected two-phase Valiant demand: every packet routes
+    s -> (uniform random intermediate m != endpoint, within the active
+    set) -> t.  Phase 1 spreads each source's row sum over the
+    intermediates, phase 2 collects each target's column sum from them —
+    two rank-1 matrices, so Valiant costs two weighted sweeps whatever the
+    pattern.  For uniform traffic this reproduces valiant_report exactly:
+    2x the minimal loads at 2x k̄."""
+    n = demand.shape[0]
+    m = len(active)
+    act = np.zeros(n, dtype=np.float64)
+    act[active] = 1.0
+    rs = demand.sum(axis=1)
+    cs = demand.sum(axis=0)
+    d1 = np.outer(rs, act) / (m - 1)
+    d2 = np.outer(act, cs) / (m - 1)
+    return d1, d2
+
+
+def saturation_report(g: Graph, pattern, routing: str = "minimal",
+                      engine: str | None = None,
+                      targets_mask: np.ndarray | None = None) -> SaturationReport:
+    """Evaluate one traffic pattern on ``g`` under minimal or Valiant
+    routing.  ``pattern`` is a spec for :func:`make_pattern` (or a
+    TrafficPattern); ``targets_mask`` defaults to the graph's leaf mask
+    for indirect networks."""
+    if routing not in ("minimal", "valiant"):
+        raise ValueError(f"routing must be 'minimal' or 'valiant', got {routing!r}")
+    pat = make_pattern(pattern)
+    if targets_mask is None:
+        targets_mask = g.meta.get("leaf_mask")
+    demand = _normalize_rows(pat.demand(g, targets_mask))
+    total = float(demand.sum())
+
+    if routing == "minimal":
+        loads, kbar_eff, diam = arc_loads_weighted(g, demand, engine=engine)
+    else:
+        active = (np.arange(g.n) if targets_mask is None
+                  else np.nonzero(np.asarray(targets_mask, dtype=bool))[0])
+        d1, d2 = _valiant_demands(demand, active)
+        l1, k1, dm1 = arc_loads_weighted(g, d1, engine=engine)
+        if np.array_equal(d1, d2):  # e.g. uniform: both phases identical
+            l2, k2, dm2 = l1, k1, dm1
+        else:
+            l2, k2, dm2 = arc_loads_weighted(g, d2, engine=engine)
+        loads = l1 + l2
+        kbar_eff = k1 + k2  # both phases have total demand == sum(D)
+        # upper bound on the longest two-leg route: the worst phase-1 and
+        # phase-2 legs need not share an intermediate (tight on the
+        # vertex-transitive families)
+        diam = dm1 + dm2
+
+    mx = float(loads.max())
+    mean = float(loads.mean())
+    return SaturationReport(
+        pattern=pat.name, routing=routing, theta=1.0 / mx, u=mean / mx,
+        max_load=mx, mean_load=mean, kbar_eff=kbar_eff, diameter=int(diam),
+        total_demand=total, loads=loads)
+
+
+DEFAULT_SWEEP = ("uniform", "bit_reversal", "transpose", "tornado",
+                 "random_permutation", "hot_region")
+
+
+def saturation_sweep(g: Graph, patterns=DEFAULT_SWEEP,
+                     routings=("minimal", "valiant"),
+                     engine: str | None = None,
+                     targets_mask: np.ndarray | None = None):
+    """Run a battery of patterns; returns ``(reports, summary)`` where
+    ``summary`` names the worst pattern per routing — min theta (the
+    throughput guarantee) and the worst-case u over patterns."""
+    reports = [saturation_report(g, p, routing=r, engine=engine,
+                                 targets_mask=targets_mask)
+               for p in patterns for r in routings]
+    summary = {}
+    for r in routings:
+        rs = [rep for rep in reports if rep.routing == r]
+        worst = min(rs, key=lambda rep: rep.theta)
+        summary[r] = {"min_theta": worst.theta, "worst_pattern": worst.pattern,
+                      "worst_u": min(rep.u for rep in rs)}
+    return reports, summary

@@ -38,6 +38,15 @@ repro.perf for the selection flags):
 ``arc_loads``/``utilization`` keep the seed's drop-in signature; traffic
 can be restricted to leaf vertices for indirect networks (Section 6) via
 ``targets_mask``.
+
+``arc_loads_weighted`` generalizes the same recurrences from the implicit
+uniform all-to-all to an arbitrary demand matrix D[s, t] (units of traffic
+from s to t, split across shortest paths): the backward coefficient
+``(targets + delta) / sigma`` simply becomes ``(D[s] + delta) / sigma``,
+so every batched engine handles a whole block of weighted sources in one
+level-synchronous sweep — a permutation pattern costs one sweep, not N.
+The uniform case is ``D = ones - I`` and reproduces ``arc_loads`` exactly.
+See repro.core.traffic for the pattern registry built on top.
 """
 
 from __future__ import annotations
@@ -49,7 +58,8 @@ import numpy as np
 from ..perf import flags
 from .graph import Graph, bfs_distances
 
-__all__ = ["arc_loads", "utilization", "UtilizationReport", "valiant_report"]
+__all__ = ["arc_loads", "arc_loads_weighted", "utilization",
+           "UtilizationReport", "valiant_report"]
 
 _ENGINES = ("auto", "naive", "numpy", "csr", "jax", "orbit")
 
@@ -161,14 +171,15 @@ class UtilizationReport:
 # ---------------------------------------------------------------------------
 
 
-def _arc_loads_naive(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
+def _arc_loads_naive(g: Graph, sources: np.ndarray, targets_mask: np.ndarray,
+                     demand: np.ndarray | None = None):
     n = g.n
     arc_u = g.arc_src
     arc_v = g.indices
     loads = np.zeros(arc_u.shape[0], dtype=np.float64)
 
     dist_sum = 0.0
-    pair_count = 0
+    pair_count: float = 0
     diam = 0
     tmask_f = targets_mask.astype(np.float64)
     for s in sources:
@@ -179,9 +190,18 @@ def _arc_loads_naive(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
         lv_v = dist[arc_v]
         tree = lv_v == lv_u + 1
         maxd = int(dist.max())
-        diam = max(diam, int(dist[targets_mask].max()))
-        dist_sum += float(dist[targets_mask].sum())
-        pair_count += int(targets_mask.sum()) - int(targets_mask[s])
+        if demand is None:
+            w = tmask_f
+            diam = max(diam, int(dist[targets_mask].max()))
+            dist_sum += float(dist[targets_mask].sum())
+            pair_count += int(targets_mask.sum()) - int(targets_mask[s])
+        else:
+            w = demand[s]
+            active = w > 0
+            if active.any():
+                diam = max(diam, int(dist[active].max()))
+            dist_sum += float((dist * w).sum())
+            pair_count += float(w.sum())
 
         # forward: shortest-path counts
         sigma = np.zeros(n, dtype=np.float64)
@@ -195,7 +215,7 @@ def _arc_loads_naive(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
         for lvl in range(maxd, 0, -1):
             m = tree & (lv_v == lvl)
             mv = arc_v[m]
-            coeff = (tmask_f[mv] + delta[mv]) / sigma[mv]
+            coeff = (w[mv] + delta[mv]) / sigma[mv]
             c = sigma[arc_u[m]] * coeff
             loads[m] += c
             np.add.at(delta, arc_u[m], c)
@@ -253,7 +273,8 @@ def _forward_levels(a32, a64, src_pos, n):
         front = nxt
 
 
-def _loads_dense_generic(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
+def _loads_dense_generic(g: Graph, sources: np.ndarray, targets_mask: np.ndarray,
+                         demand: np.ndarray | None = None):
     n = g.n
     a64 = g.adjacency_dense(np.float64)
     a32 = g.adjacency_dense(np.float32)
@@ -263,13 +284,15 @@ def _loads_dense_generic(g: Graph, sources: np.ndarray, targets_mask: np.ndarray
     tm = targets_mask.astype(np.float64)
     t_count = int(targets_mask.sum())
     dist_sum = 0.0
-    pair_count = 0
+    pair_count: float = 0
     diam = 0
 
     # With full all-to-all traffic, reversing every path gives
     # loads[u->v] == loads[v->u] in total, so only half the arcs need the
-    # per-arc reduction; the mirror is a gather at the end.
-    symmetric = bool(targets_mask.all()) and np.array_equal(sources, np.arange(n))
+    # per-arc reduction; the mirror is a gather at the end.  An arbitrary
+    # demand matrix has no such symmetry.
+    symmetric = (demand is None and bool(targets_mask.all())
+                 and np.array_equal(sources, np.arange(n)))
     arc_sel = np.nonzero(arc_u < arc_v)[0] if symmetric else np.arange(n_arcs)
 
     def sweep(src):
@@ -277,16 +300,24 @@ def _loads_dense_generic(g: Graph, sources: np.ndarray, targets_mask: np.ndarray
         dist, sigma, maxd = _forward_levels(a32, a64, src, n)
         if (dist < 0).any():
             raise ValueError("graph is disconnected")
-        dm = dist[:, targets_mask]
-        diam = int(dm.max())
-        dist_sum = float(dm.sum(dtype=np.float64))
-        pair_count = b * t_count - int(targets_mask[src].sum())
+        if demand is None:
+            w = tm[None, :]
+            dm = dist[:, targets_mask]
+            diam = int(dm.max())
+            dist_sum = float(dm.sum(dtype=np.float64))
+            pair_count = b * t_count - int(targets_mask[src].sum())
+        else:
+            w = demand[src]  # (b, n) per-source demand rows
+            active = w > 0
+            diam = int(dist[active].max()) if active.any() else 0
+            dist_sum = float((dist * w).sum(dtype=np.float64))
+            pair_count = float(w.sum())
 
         sinv = 1.0 / sigma  # sigma >= 1 everywhere once connected
         delta = np.zeros((b, n), dtype=np.float64)
         ctot = np.zeros((b, n), dtype=np.float64)
         for lvl in range(maxd, 0, -1):
-            coeff = (tm[None, :] + delta) * sinv
+            coeff = (w + delta) * sinv
             coeff *= dist == lvl
             ctot += coeff
             if lvl >= 2:
@@ -567,7 +598,8 @@ def _loads_dense_bipartite_all(g: Graph, targets_mask: np.ndarray, side: np.ndar
 # ---------------------------------------------------------------------------
 
 
-def _loads_csr(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
+def _loads_csr(g: Graph, sources: np.ndarray, targets_mask: np.ndarray,
+               demand: np.ndarray | None = None):
     n = g.n
     arc_u, arc_v = g.arc_src, g.indices
     n_arcs = arc_u.shape[0]
@@ -582,7 +614,7 @@ def _loads_csr(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
     t_count = int(targets_mask.sum())
     loads = np.zeros(n_arcs, dtype=np.float64)
     dist_sum = 0.0
-    pair_count = 0
+    pair_count: float = 0
     diam = 0
 
     blk = flags().util_block
@@ -611,16 +643,25 @@ def _loads_csr(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
             sig_t[new] = red[new]
         if (dist_t < 0).any():
             raise ValueError("graph is disconnected")
-        dm = dist_t[targets_mask]
-        diam = max(diam, int(dm.max()))
-        dist_sum += float(dm.sum(dtype=np.float64))
-        pair_count += b * t_count - int(targets_mask[sb].sum())
+        if demand is None:
+            wt = tm[:, None]
+            dm = dist_t[targets_mask]
+            diam = max(diam, int(dm.max()))
+            dist_sum += float(dm.sum(dtype=np.float64))
+            pair_count += b * t_count - int(targets_mask[sb].sum())
+        else:
+            wt = np.ascontiguousarray(demand[sb].T)  # (n, b) demand columns
+            active = wt > 0
+            if active.any():
+                diam = max(diam, int(dist_t[active].max()))
+            dist_sum += float((dist_t * wt).sum(dtype=np.float64))
+            pair_count += float(wt.sum())
 
         delta_t = np.zeros((n, b), dtype=np.float64)
         for lvl in range(maxd, 0, -1):
             m = dist_t == lvl
             coeff = np.zeros((n, b), dtype=np.float64)
-            np.divide(tm[:, None] + delta_t, sig_t, out=coeff, where=m)
+            np.divide(wt + delta_t, sig_t, out=coeff, where=m)
             contrib = sig_t[arc_u] * coeff[arc_v]
             contrib *= dist_t[arc_u] == lvl - 1
             loads += contrib.sum(axis=1)
@@ -646,19 +687,20 @@ def _jax_available() -> bool:
         return False
 
 
-def _loads_jax(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
+def _loads_jax(g: Graph, sources: np.ndarray, targets_mask: np.ndarray,
+               demand: np.ndarray | None = None):
     import jax
     import jax.numpy as jnp
 
     old_x64 = jax.config.jax_enable_x64
     jax.config.update("jax_enable_x64", True)
     try:
-        return _loads_jax_x64(g, sources, targets_mask, jax, jnp)
+        return _loads_jax_x64(g, sources, targets_mask, jax, jnp, demand)
     finally:
         jax.config.update("jax_enable_x64", old_x64)
 
 
-def _loads_jax_x64(g: Graph, sources, targets_mask, jax, jnp):
+def _loads_jax_x64(g: Graph, sources, targets_mask, jax, jnp, demand=None):
     n = g.n
     adj = jnp.asarray(g.adjacency_dense(np.float64))
     arc_u = jnp.asarray(g.arc_src)
@@ -683,6 +725,13 @@ def _loads_jax_x64(g: Graph, sources, targets_mask, jax, jnp):
         return delta, ctot + coeff
 
     @jax.jit
+    def bwd_step_weighted(w, delta, ctot, dist, sigma, lvl):
+        m = dist == lvl
+        coeff = jnp.where(m, (w + delta) / jnp.where(m, sigma, 1.0), 0.0)
+        delta = delta + sigma * ((coeff @ adj) * (dist == lvl - 1))
+        return delta, ctot + coeff
+
+    @jax.jit
     def arc_sum(sigma, ctot, dist):
         s_u = sigma[:, arc_u]
         c_v = ctot[:, arc_v]
@@ -691,7 +740,7 @@ def _loads_jax_x64(g: Graph, sources, targets_mask, jax, jnp):
 
     loads = np.zeros(g.arc_src.shape[0], dtype=np.float64)
     dist_sum = 0.0
-    pair_count = 0
+    pair_count: float = 0
     diam = 0
     block = _source_block_rows(n)
     for lo in range(0, len(sources), block):
@@ -715,15 +764,27 @@ def _loads_jax_x64(g: Graph, sources, targets_mask, jax, jnp):
         dist_np = np.asarray(dist)
         if (dist_np < 0).any():
             raise ValueError("graph is disconnected")
-        dm = dist_np[:, targets_mask]
-        diam = max(diam, int(dm.max()))
-        dist_sum += float(dm.sum(dtype=np.float64))
-        pair_count += b * t_count - int(targets_mask[sb].sum())
+        if demand is None:
+            dm = dist_np[:, targets_mask]
+            diam = max(diam, int(dm.max()))
+            dist_sum += float(dm.sum(dtype=np.float64))
+            pair_count += b * t_count - int(targets_mask[sb].sum())
+        else:
+            w_np = demand[sb]
+            active = w_np > 0
+            if active.any():
+                diam = max(diam, int(dist_np[active].max()))
+            dist_sum += float((dist_np * w_np).sum(dtype=np.float64))
+            pair_count += float(w_np.sum())
+            w = jnp.asarray(w_np)
 
         delta = jnp.zeros((b, n), dtype=jnp.float64)
         ctot = jnp.zeros((b, n), dtype=jnp.float64)
         for l in range(maxd, 0, -1):
-            delta, ctot = bwd_step(delta, ctot, dist, sigma, l)
+            if demand is None:
+                delta, ctot = bwd_step(delta, ctot, dist, sigma, l)
+            else:
+                delta, ctot = bwd_step_weighted(w, delta, ctot, dist, sigma, l)
         loads += np.asarray(arc_sum(sigma, ctot, dist))
     return loads, dist_sum, pair_count, diam
 
@@ -766,16 +827,21 @@ def _loads_orbit(g: Graph, targets_mask: np.ndarray, inner):
 # ---------------------------------------------------------------------------
 
 
-def _loads_numpy(g: Graph, sources: np.ndarray, targets_mask: np.ndarray):
+def _loads_numpy(g: Graph, sources: np.ndarray, targets_mask: np.ndarray,
+                 demand: np.ndarray | None = None):
     if g.n <= flags().util_dense_max:
         with _blas_limit():
+            if demand is not None:
+                # arbitrary per-pair demand: the half-size bipartite fast
+                # paths assume uniform weights, so run the generic engine
+                return _loads_dense_generic(g, sources, targets_mask, demand)
             side = g.bipartition()
             if side is not None:
                 if targets_mask.all() and np.array_equal(sources, np.arange(g.n)):
                     return _loads_dense_bipartite_all(g, targets_mask, side)
                 return _loads_dense_bipartite(g, sources, targets_mask, side)
             return _loads_dense_generic(g, sources, targets_mask)
-    return _loads_csr(g, sources, targets_mask)
+    return _loads_csr(g, sources, targets_mask, demand)
 
 
 def _exact_engine(g: Graph):
@@ -837,6 +903,56 @@ def arc_loads(g: Graph, sources=None, targets_mask: np.ndarray | None = None,
     loads, dist_sum, pair_count, diam = res
     kbar = dist_sum / pair_count
     return loads, kbar, diam
+
+
+def arc_loads_weighted(g: Graph, demand: np.ndarray,
+                       engine: str | None = None
+                       ) -> tuple[np.ndarray, float, int]:
+    """Per-arc load under an arbitrary traffic matrix, split across all
+    shortest paths (the demand-matrix generalization of Theorem 3.9).
+
+    ``demand[s, t]`` is the traffic s injects for t (any nonnegative
+    units); the diagonal is ignored.  Returns ``(loads, kbar, diameter)``
+    where ``kbar`` is the demand-weighted mean hop count
+    ``sum(D * dist) / sum(D)`` and ``diameter`` the longest hop count any
+    demand actually travels.  ``engine`` as in :func:`arc_loads`, except
+    ``orbit`` (the automorphism shortcut assumes uniform traffic) — under
+    ``auto``/``orbit`` the exact engines run instead.
+    """
+    n = g.n
+    demand = np.array(demand, dtype=np.float64)  # private copy, diag zeroed
+    if demand.shape != (n, n):
+        raise ValueError(f"demand must be ({n}, {n}), got {demand.shape}")
+    if not np.isfinite(demand).all():
+        raise ValueError("demand must be finite")
+    if (demand < 0).any():
+        raise ValueError("demand must be nonnegative")
+    np.fill_diagonal(demand, 0.0)
+    total = float(demand.sum())
+    if total == 0.0:
+        raise ValueError("demand matrix is all zero")
+    sources = np.nonzero(demand.any(axis=1))[0]
+    targets_mask = np.ones(n, dtype=bool)
+
+    eng = (engine if engine is not None else flags().util_engine).lower()
+    if eng not in _ENGINES:
+        raise ValueError(f"unknown engine {eng!r}; options: {_ENGINES}")
+
+    if eng == "naive":
+        res = _arc_loads_naive(g, sources, targets_mask, demand)
+    elif eng == "numpy":
+        res = _loads_numpy(g, sources, targets_mask, demand)
+    elif eng == "csr":
+        res = _loads_csr(g, sources, targets_mask, demand)
+    elif eng == "jax":
+        if not _jax_available():
+            raise RuntimeError("engine='jax' requested but jax is not importable")
+        res = _loads_jax(g, sources, targets_mask, demand)
+    else:  # auto / orbit: the exact-path choice by graph size
+        res = _exact_engine(g)(g, sources, targets_mask, demand)
+
+    loads, dist_sum, total_demand, diam = res
+    return loads, dist_sum / total_demand, diam
 
 
 def utilization(g: Graph, sources=None, targets_mask: np.ndarray | None = None,

@@ -1,4 +1,4 @@
 from .collectives import (CollectiveCost, allgather_time, allreduce_time,
-                          alltoall_time, collective_time)
+                          alltoall_time, collective_time, reducescatter_time)
 from .model import FabricModel, make_fabric, torus3d_graph
 from .planner import FabricCandidate, StepProfile, candidate_fabrics, plan

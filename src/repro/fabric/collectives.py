@@ -10,6 +10,13 @@ paper's uniform traffic pattern, so its duration at saturation is
 — i.e. the k̄/u cost figure directly multiplies collective time.  All-reduce
 is reduce-scatter + all-gather.  A latency term (hops × per-hop latency)
 covers the small-message regime.
+
+Every entry point takes an optional ``pattern`` (any repro.core.traffic
+spec, e.g. ``"hot_region(0.2,4)"`` or ``"collective(ring-all-reduce)"``)
+and ``routing`` ("minimal" | "valiant"): the saturation throughput of that
+pattern then replaces Eq. 1's uniform Δ·u/k̄ and its demand-weighted hop
+count replaces k̄ in the latency term — collectives priced under the
+congestion their actual schedule (or competing background traffic) causes.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ from dataclasses import dataclass
 from .model import FabricModel
 
 __all__ = ["CollectiveCost", "collective_time", "allreduce_time",
-           "allgather_time", "alltoall_time"]
+           "allgather_time", "alltoall_time", "reducescatter_time"]
 
 PER_HOP_LATENCY_S = 0.5e-6
 
@@ -36,45 +43,57 @@ class CollectiveCost:
         return self.bandwidth_s + self.latency_s
 
 
-def _uniform_time(fabric: FabricModel, sent_per_node: float) -> float:
-    return sent_per_node / fabric.node_uniform_bw
+def _node_bw(fabric: FabricModel, pattern, routing: str) -> float:
+    if pattern is None:
+        return fabric.node_uniform_bw
+    return fabric.pattern_node_bw(pattern, routing)
 
 
-def allgather_time(fabric: FabricModel, bytes_global: float, n: int) -> CollectiveCost:
+def _hops(fabric: FabricModel, pattern, routing: str) -> float:
+    if pattern is None:
+        return fabric.kbar
+    return fabric.pattern_kbar(pattern, routing)
+
+
+def allgather_time(fabric: FabricModel, bytes_global: float, n: int,
+                   pattern=None, routing: str = "minimal") -> CollectiveCost:
     """Each node ends with bytes_global; sends its 1/n shard to n-1 peers
     (uniform destinations)."""
     sent = bytes_global * (n - 1) / n
     return CollectiveCost("all-gather", bytes_global / n,
-                          _uniform_time(fabric, sent),
-                          fabric.kbar * PER_HOP_LATENCY_S)
+                          sent / _node_bw(fabric, pattern, routing),
+                          _hops(fabric, pattern, routing) * PER_HOP_LATENCY_S)
 
 
-def reducescatter_time(fabric: FabricModel, bytes_global: float, n: int) -> CollectiveCost:
+def reducescatter_time(fabric: FabricModel, bytes_global: float, n: int,
+                       pattern=None, routing: str = "minimal") -> CollectiveCost:
     sent = bytes_global * (n - 1) / n
     return CollectiveCost("reduce-scatter", bytes_global / n,
-                          _uniform_time(fabric, sent),
-                          fabric.kbar * PER_HOP_LATENCY_S)
+                          sent / _node_bw(fabric, pattern, routing),
+                          _hops(fabric, pattern, routing) * PER_HOP_LATENCY_S)
 
 
-def allreduce_time(fabric: FabricModel, bytes_global: float, n: int) -> CollectiveCost:
-    rs = reducescatter_time(fabric, bytes_global, n)
-    ag = allgather_time(fabric, bytes_global, n)
+def allreduce_time(fabric: FabricModel, bytes_global: float, n: int,
+                   pattern=None, routing: str = "minimal") -> CollectiveCost:
+    rs = reducescatter_time(fabric, bytes_global, n, pattern, routing)
+    ag = allgather_time(fabric, bytes_global, n, pattern, routing)
     return CollectiveCost("all-reduce", bytes_global,
                           rs.bandwidth_s + ag.bandwidth_s,
                           rs.latency_s + ag.latency_s)
 
 
-def alltoall_time(fabric: FabricModel, bytes_per_node: float, n: int) -> CollectiveCost:
+def alltoall_time(fabric: FabricModel, bytes_per_node: float, n: int,
+                  pattern=None, routing: str = "minimal") -> CollectiveCost:
     """Personalized all-to-all: the exact uniform-traffic pattern."""
     sent = bytes_per_node * (n - 1) / n
     return CollectiveCost("all-to-all", bytes_per_node,
-                          _uniform_time(fabric, sent),
-                          fabric.kbar * PER_HOP_LATENCY_S)
+                          sent / _node_bw(fabric, pattern, routing),
+                          _hops(fabric, pattern, routing) * PER_HOP_LATENCY_S)
 
 
 def collective_time(fabric: FabricModel, op: str, bytes_amount: float,
-                    n: int) -> CollectiveCost:
+                    n: int, pattern=None, routing: str = "minimal") -> CollectiveCost:
     fn = {"all-reduce": allreduce_time, "all-gather": allgather_time,
           "reduce-scatter": reducescatter_time, "all-to-all": alltoall_time,
           "collective-permute": alltoall_time}[op]
-    return fn(fabric, bytes_amount, n)
+    return fn(fabric, bytes_amount, n, pattern, routing)

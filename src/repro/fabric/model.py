@@ -76,6 +76,67 @@ class FabricModel:
         """bytes/s each TERMINAL can inject at saturation (uniform traffic)."""
         return self.injection_links * self.link_bytes_per_s / self.terminals_per_router
 
+    # Beyond this size the dense (N, N) demand matrices of the pattern
+    # engine stop being the right tool (25k routers = 5 GB per matrix);
+    # evaluate patterns on a representative smaller instance instead.
+    PATTERN_MAX_N = 8192
+
+    def pattern_report(self, pattern, routing: str = "minimal"):
+        """Saturation analysis of one traffic pattern on this fabric
+        (repro.core.traffic), cached per (spec, routing) for registry-spec
+        strings (ad-hoc TrafficPattern objects are evaluated fresh).
+
+        Non-uniform patterns always use shortest-path (or Valiant)
+        routing, including on dragonfly — the canonical l-g-l convention
+        this model applies to dragonfly's UNIFORM stats has no published
+        per-pattern counterpart."""
+        from ..core.traffic import make_pattern, saturation_report
+        if self.graph.n > self.PATTERN_MAX_N:
+            raise ValueError(
+                f"pattern saturation needs dense (N, N) demand matrices; "
+                f"N={self.graph.n} > {self.PATTERN_MAX_N}.  Evaluate the "
+                f"pattern on a smaller instance of the same family.")
+        pat = make_pattern(pattern)
+        # spec strings key by value; ad-hoc TrafficPattern objects by
+        # identity (the cached entry keeps the object alive, so its id is
+        # stable) — repeated collective_time calls with the same object
+        # then pay one saturation analysis, and a different object that
+        # happens to reuse a registry name cannot alias a stale entry
+        key = ((pattern, routing) if isinstance(pattern, str)
+               else (id(pat), routing))
+        cache = self.graph._struct_cache.setdefault("fabric_patterns", {})
+        if key not in cache:
+            cache[key] = (pat, saturation_report(self.graph, pat,
+                                                 routing=routing))
+        return cache[key][1]
+
+    def _is_uniform(self, pattern) -> bool:
+        from ..core.traffic import make_pattern
+        return make_pattern(pattern).name == "uniform"
+
+    def pattern_node_bw(self, pattern, routing: str = "minimal") -> float:
+        """bytes/s each TERMINAL can inject at saturation under an arbitrary
+        traffic pattern — the generalized Eq. (1): theta replaces Δ·u/k̄.
+
+        The uniform pattern routes through ``node_uniform_bw`` so fabric
+        conventions are preserved exactly: dragonfly keeps its canonical
+        l-g-l Table-2 stats (shortest-path theta is ~35% lower there) and
+        Eq. 1's Δ (not mean-degree) convention holds on irregular graphs;
+        Valiant halves it, per the uniform two-phase identity."""
+        if self._is_uniform(pattern):
+            bw = self.node_uniform_bw
+            return bw / 2.0 if routing == "valiant" else bw
+        rep = self.pattern_report(pattern, routing)
+        return rep.theta * self.link_bytes_per_s / self.terminals_per_router
+
+    def pattern_kbar(self, pattern, routing: str = "minimal") -> float:
+        """Demand-weighted mean hop count under the pattern (2 phases under
+        Valiant); prices the latency term of small-message collectives.
+        Uniform keeps the fabric's own k̄ convention (see pattern_node_bw)."""
+        if self._is_uniform(pattern):
+            return 2.0 * self.kbar if routing == "valiant" else self.kbar
+        return self.pattern_report(pattern, routing).kbar_eff
+
 
 def make_fabric(kind: str, link_gbps: float = 400.0, **kw) -> FabricModel:
     from ..core import (build_topology, demi_pn_graph, dragonfly_graph,

@@ -1,0 +1,6 @@
+"""Version-compat shims for the pallas TPU kernels."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -57,8 +57,11 @@ MULTIDEV = textwrap.dedent("""
     loss1 = float(np.asarray(metrics["loss"]))
     state3, metrics2 = step_fn(state2, batch)
     loss2 = float(np.asarray(metrics2["loss"]))
+    ca = compiled.cost_analysis()   # jax < 0.5 returns [dict], newer a dict
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     print(json.dumps({"collectives": found, "loss1": loss1, "loss2": loss2,
-                      "flops": compiled.cost_analysis().get("flops", -1.0)}))
+                      "flops": ca.get("flops", -1.0)}))
 """)
 
 

@@ -1,0 +1,150 @@
+"""Parity of the weighted (traffic-matrix) arc-load engines against the
+naive per-source weighted Brandes reference, mirroring test_util_engines.
+
+Every batched engine (numpy dense generic, CSR reduceat, jax) must
+reproduce the naive accumulation to float64 round-off on the paper's
+families — including bipartite graphs (which the weighted path routes
+through the dense generic engine), leaf-restricted indirect networks, and
+disconnected inputs."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    demi_pn_graph,
+    hypercube_graph,
+    oft_graph,
+    pn_graph,
+)
+from repro.core.utilization import arc_loads, arc_loads_weighted
+from repro.fabric.model import torus3d_graph
+
+FAMILIES = [
+    lambda: pn_graph(4),            # bipartite, diameter 3
+    lambda: demi_pn_graph(5),       # dense generic, diameter 2
+    lambda: oft_graph(3),           # bipartite indirect (leaf mask in meta)
+    lambda: torus3d_graph(3, 3, 3), # the TPU-pod reference point
+    lambda: hypercube_graph(4),     # bipartite, sigma > 1, diameter 4
+]
+
+ENGINES = ["numpy", "csr", "auto"]
+
+
+def _rand_demand(n, seed=0, density=0.3):
+    rng = np.random.default_rng(seed)
+    d = rng.random((n, n)) * (rng.random((n, n)) < density)
+    d[0] = 0.0  # a source with no demand at all
+    return d
+
+
+def _perm_demand(n, seed=1):
+    rng = np.random.default_rng(seed)
+    d = np.zeros((n, n))
+    d[np.arange(n), rng.permutation(n)] = rng.random(n) + 0.5
+    return d
+
+
+@pytest.mark.parametrize("build", FAMILIES)
+@pytest.mark.parametrize("make_demand", [_rand_demand, _perm_demand])
+def test_weighted_parity_vs_naive(build, make_demand):
+    g = build()
+    d = make_demand(g.n)
+    ref_loads, ref_kbar, ref_diam = arc_loads_weighted(g, d, engine="naive")
+    for engine in ENGINES:
+        loads, kbar, diam = arc_loads_weighted(g, d, engine=engine)
+        np.testing.assert_allclose(loads, ref_loads, rtol=1e-9, atol=1e-9,
+                                   err_msg=engine)
+        assert kbar == pytest.approx(ref_kbar, abs=1e-12), engine
+        assert diam == ref_diam, engine
+
+
+def test_weighted_jax_parity():
+    pytest.importorskip("jax")
+    for g in [pn_graph(3), torus3d_graph(3, 3, 1)]:
+        d = _rand_demand(g.n, seed=3)
+        ref = arc_loads_weighted(g, d, engine="naive")
+        got = arc_loads_weighted(g, d, engine="jax")
+        np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+        assert got[1] == pytest.approx(ref[1], abs=1e-12)
+        assert got[2] == ref[2]
+
+
+def test_weighted_csr_forced_on_bipartite():
+    """CSR sweep handles bipartite graphs directly (no half-size blocks)."""
+    g = hypercube_graph(3)
+    d = _perm_demand(g.n, seed=5)
+    ref = arc_loads_weighted(g, d, engine="naive")
+    got = arc_loads_weighted(g, d, engine="csr")
+    np.testing.assert_allclose(got[0], ref[0], rtol=1e-9, atol=1e-9)
+
+
+def test_weighted_uniform_matches_unweighted():
+    """D = ones - I reproduces arc_loads bit-for-bit modulo float64
+    round-off, on direct and leaf-restricted graphs."""
+    g = demi_pn_graph(4)
+    u = np.ones((g.n, g.n)) - np.eye(g.n)
+    lw, kw, dw = arc_loads_weighted(g, u, engine="numpy")
+    l0, k0, d0 = arc_loads(g, engine="naive")
+    np.testing.assert_allclose(lw, l0, rtol=1e-9, atol=1e-9)
+    assert kw == pytest.approx(k0, abs=1e-12)
+    assert dw == d0
+
+
+def test_weighted_leaf_restricted_oft():
+    """Demand confined to OFT leaves reproduces the targets_mask path."""
+    g = oft_graph(3)
+    leaf = g.meta["leaf_mask"]
+    d = np.zeros((g.n, g.n))
+    d[np.ix_(leaf, leaf)] = 1.0
+    lw, kw, dw = arc_loads_weighted(g, d, engine="numpy")
+    l0, k0, d0 = arc_loads(g, targets_mask=leaf, engine="naive")
+    np.testing.assert_allclose(lw, l0, rtol=1e-9, atol=1e-9)
+    assert kw == pytest.approx(k0, abs=1e-12)
+    assert dw == d0
+
+
+def test_weighted_disconnected_raises():
+    g = Graph(4, np.array([[0, 1], [2, 3]]))
+    d = np.zeros((4, 4))
+    d[0, 1] = 1.0
+    for engine in ["naive", "numpy", "csr"]:
+        with pytest.raises(ValueError, match="disconnected"):
+            arc_loads_weighted(g, d, engine=engine)
+
+
+def test_weighted_input_validation():
+    g = pn_graph(2)
+    with pytest.raises(ValueError, match="demand must be"):
+        arc_loads_weighted(g, np.ones((3, 3)))
+    neg = np.ones((g.n, g.n))
+    neg[1, 2] = -1.0
+    with pytest.raises(ValueError, match="nonnegative"):
+        arc_loads_weighted(g, neg)
+    with pytest.raises(ValueError, match="all zero"):
+        arc_loads_weighted(g, np.eye(g.n))  # diagonal is ignored
+    with pytest.raises(ValueError, match="unknown engine"):
+        arc_loads_weighted(g, np.ones((g.n, g.n)), engine="warp-drive")
+
+
+def test_weighted_diagonal_ignored():
+    g = demi_pn_graph(3)
+    d = _rand_demand(g.n, seed=7)
+    d2 = d.copy()
+    np.fill_diagonal(d2, 99.0)
+    a = arc_loads_weighted(g, d, engine="numpy")
+    b = arc_loads_weighted(g, d2, engine="numpy")
+    np.testing.assert_array_equal(a[0], b[0])
+    assert a[1] == b[1]
+
+
+def test_weighted_single_pair_is_shortest_path_unit():
+    """One unit s->t puts exactly 1/num_paths load on each shortest-path
+    arc and nothing anywhere else."""
+    g = torus3d_graph(4, 1, 1)  # a 4-ring: two antipodal shortest paths
+    d = np.zeros((g.n, g.n))
+    d[0, 2] = 1.0
+    loads, kbar, diam = arc_loads_weighted(g, d, engine="numpy")
+    assert kbar == 2.0 and diam == 2
+    assert loads.sum() == pytest.approx(2.0)  # 2 hops of 1 unit
+    assert loads.max() == pytest.approx(0.5)  # split over both paths

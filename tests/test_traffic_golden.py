@@ -1,0 +1,102 @@
+"""Golden-value regression pins: paper Table 2/5 (k̄, u) quantities for
+small PN/OFT instances plus the new per-pattern saturation throughputs.
+
+These literals were computed by the parity-tested engines at PR 2 and are
+intentionally hardcoded so a future engine refactor (new GEMM order, new
+orbit shortcut, resharded sweeps) cannot silently drift the numbers the
+paper comparison rests on.  Tolerances are float64 round-off, not physics.
+"""
+
+import pytest
+
+from repro.core import (
+    demi_pn_graph,
+    oft_graph,
+    pn_graph,
+    saturation_report,
+    utilization,
+)
+
+ABS = 1e-9
+
+# (builder, N, kbar, u, diameter) — Table 2's measured instances (PN rows
+# approach k̄ -> 2.5, u = 1; OFT is the Section-6 u = 1, k̄ = 2 family;
+# demi-PN(16) is the Table 5 working size scaled down).
+GOLDEN_KBAR_U = [
+    (lambda: pn_graph(4), 42, 2.268292682926829, 1.0, 3),
+    (lambda: pn_graph(16), 546, 2.438532110091743, 1.0, 3),
+    (lambda: oft_graph(3), 39, 2.0, 1.0, 2),
+    (lambda: oft_graph(4), 63, 2.0, 1.0, 2),
+    (lambda: demi_pn_graph(16), 273, 1.9377289377289377, 0.9724264705882353, 2),
+]
+
+
+@pytest.mark.parametrize("build,n,kbar,u,diam", GOLDEN_KBAR_U)
+def test_golden_kbar_u(build, n, kbar, u, diam):
+    g = build()
+    assert g.n == n
+    rep = utilization(g)
+    assert rep.kbar == pytest.approx(kbar, abs=ABS)
+    assert rep.u == pytest.approx(u, abs=ABS)
+    assert rep.diameter == diam
+
+
+# (graph tag, pattern, routing) -> (theta, u); computed at PR 2 with the
+# naive-parity-tested weighted engines.
+GOLDEN_THETA = {
+    ("pn4", "uniform", "minimal"): (2.204301075268817, 1.0),
+    ("pn4", "uniform", "valiant"): (1.102150537634408, 1.0),
+    ("pn4", "tornado", "minimal"): (0.5555555555555556, 0.28042328042328046),
+    ("pn4", "tornado", "valiant"): (1.1021505376344085, 1.0),
+    ("pn4", "bit_reversal", "minimal"): (0.7142857142857143, 0.1904761904761905),
+    ("pn4", "transpose", "minimal"): (0.5, 0.17142857142857143),
+    ("pn4", "random_permutation", "minimal"): (0.45454545454545453,
+                                               0.21212121212121213),
+    ("pn4", "hot_region", "minimal"): (0.931372549019608, 0.4178921568627451),
+    # OFT: the leaf-rank half-shift stays perfectly balanced (u = 1), while
+    # bit-reversal/transpose collapse to the single-spine bottleneck
+    ("oft4", "uniform", "minimal"): (5.0, 1.0),
+    ("oft4", "tornado", "minimal"): (5.0, 1.0),
+    ("oft4", "bit_reversal", "minimal"): (1.0, 0.11428571428571428),
+    ("oft4", "transpose", "minimal"): (1.0, 0.14285714285714285),
+    ("oft4", "uniform", "valiant"): (2.5, 1.0),
+    ("oft4", "hot_region", "minimal"): (1.1585365853658536,
+                                        0.22916666666666663),
+}
+
+_GRAPHS = {"pn4": lambda: pn_graph(4), "oft4": lambda: oft_graph(4)}
+
+
+@pytest.mark.parametrize("key,expect", sorted(GOLDEN_THETA.items()))
+def test_golden_pattern_theta(key, expect):
+    tag, pattern, routing = key
+    g = _GRAPHS[tag]()
+    rep = saturation_report(g, pattern, routing=routing)
+    theta, u = expect
+    assert rep.theta == pytest.approx(theta, abs=ABS), key
+    assert rep.u == pytest.approx(u, abs=ABS), key
+
+
+def test_golden_uniform_bit_identical_to_arc_loads():
+    """D = ones - I through the weighted engines reproduces PR 1's
+    arc_loads BIT-identically engine-for-engine: the weighted backward
+    coefficient (w + delta)/sigma with w == 1.0 runs the exact float ops
+    of the uniform (tm + delta)/sigma path.  (The one exception is the
+    unweighted numpy dispatch on bipartite graphs, which takes the
+    half-size biadjacency fast path — a different, parity-tested engine.)"""
+    import numpy as np
+    from repro.core.utilization import arc_loads, arc_loads_weighted
+    for g, engines in [(demi_pn_graph(5), ["naive", "csr", "numpy"]),
+                       (pn_graph(4), ["naive", "csr"])]:
+        u = np.ones((g.n, g.n)) - np.eye(g.n)
+        for eng in engines:
+            lw, kw, dw = arc_loads_weighted(g, u, engine=eng)
+            l0, k0, d0 = arc_loads(g, engine=eng)
+            assert np.array_equal(lw, l0), (g.name, eng)
+            assert dw == d0
+    # bipartite numpy fast path: parity to round-off, not bitwise
+    g = pn_graph(4)
+    u = np.ones((g.n, g.n)) - np.eye(g.n)
+    np.testing.assert_allclose(arc_loads_weighted(g, u, engine="numpy")[0],
+                               arc_loads(g, engine="numpy")[0],
+                               rtol=1e-12, atol=1e-12)

@@ -1,0 +1,254 @@
+"""Traffic-pattern registry and saturation-report semantics: Eq. 1
+consistency, Valiant's worst-case guarantee, pattern parsing, and the
+fabric-layer wiring (collectives priced under non-uniform load)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_topology,
+    make_pattern,
+    oft_graph,
+    pn_graph,
+    saturation_report,
+    saturation_sweep,
+    utilization,
+)
+from repro.core.reference import dragonfly_graph
+from repro.core.traffic import DEFAULT_SWEEP, PATTERNS, TrafficPattern
+from repro.core.utilization import valiant_report
+from repro.fabric import collective_time, make_fabric
+from repro.fabric.model import FabricModel, torus3d_graph
+
+
+# ---------------------------------------------------------------------------
+# Pattern construction
+# ---------------------------------------------------------------------------
+
+
+def test_make_pattern_specs():
+    assert make_pattern("uniform").name == "uniform"
+    assert make_pattern("shift(3)").name == "shift(3)"
+    assert make_pattern("hot_region(0.25, 4)").name == "hot_region(0.25,4)"
+    assert make_pattern("collective(ring-all-reduce)").name == \
+        "collective(ring-all-reduce)"
+    pat = make_pattern("tornado")
+    assert make_pattern(pat) is pat  # pass-through
+    with pytest.raises(ValueError, match="unknown traffic pattern"):
+        make_pattern("warp-drive")
+    with pytest.raises(ValueError, match="unknown collective"):
+        make_pattern("collective(gossip)")
+    with pytest.raises(ValueError, match="frac"):
+        make_pattern("hot_region(1.5)")
+
+
+def test_registry_covers_issue_patterns():
+    for name in ["uniform", "bit_reversal", "transpose", "shift", "tornado",
+                 "random_permutation", "hot_region", "collective"]:
+        assert name in PATTERNS
+
+
+@pytest.mark.parametrize("spec", ["bit_reversal", "transpose", "shift(5)",
+                                  "tornado", "random_permutation(3)"])
+def test_permutation_patterns_send_at_most_one_unit(spec):
+    g = torus3d_graph(4, 4, 1)
+    d = make_pattern(spec).demand(g)
+    assert d.shape == (g.n, g.n)
+    assert ((d == 0) | (d == 1)).all()
+    assert (d.sum(axis=1) <= 1).all()       # each source sends <= 1 target
+    assert (d.sum(axis=0) <= 1).all()       # each target receives <= 1
+    assert np.diagonal(d).sum() == 0
+
+
+def test_bit_reversal_is_involution_on_power_of_two():
+    g = torus3d_graph(4, 4, 1)  # 16 ranks
+    d = make_pattern("bit_reversal").demand(g)
+    perm = np.argmax(d, axis=1)
+    moved = d.sum(axis=1) > 0
+    assert moved.sum() > 0
+    np.testing.assert_array_equal(perm[perm[moved]], np.nonzero(moved)[0])
+
+
+def test_collective_demand_totals_match_byte_accounting():
+    g = torus3d_graph(4, 1, 1)
+    n = g.n
+    # spread all-gather: each node sends (n-1)/n of bytes_global
+    d = make_pattern("collective(all-gather)").demand(g)
+    np.testing.assert_allclose(d.sum(axis=1), (n - 1) / n)
+    # ring all-reduce moves the same 2(n-1)/n bytes down one arc per source
+    r = make_pattern("collective(ring-all-reduce)").demand(g)
+    np.testing.assert_allclose(r.sum(axis=1), 2 * (n - 1) / n)
+    assert (np.count_nonzero(r, axis=1) == 1).all()
+
+
+def test_leaf_mask_restricts_patterns():
+    g = oft_graph(3)
+    leaf = g.meta["leaf_mask"]
+    d = make_pattern("tornado").demand(g)  # leaf_mask picked up from meta
+    spine = ~leaf
+    assert d[spine].sum() == 0 and d[:, spine].sum() == 0
+    assert d.sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# saturation_report semantics
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_theta_is_eq1_injection():
+    """With demand normalized to 1 unit per source, theta == d̄·u/k̄ (mean
+    degree; == the paper's Δ·u/k̄ on regular graphs like PN — demi-PN's
+    self-orthogonal points have reduced degree, which Eq. 1's Δ hides)."""
+    for g in [pn_graph(4), build_topology("demi_pn", 5)]:
+        rep = utilization(g)
+        sr = saturation_report(g, "uniform")
+        mean_deg = 2.0 * g.num_edges / g.n
+        assert sr.theta == pytest.approx(mean_deg * rep.u / rep.kbar, abs=1e-9)
+        assert sr.u == pytest.approx(rep.u, abs=1e-9)
+        assert sr.kbar_eff == pytest.approx(rep.kbar, abs=1e-9)
+        assert sr.diameter == rep.diameter
+    # regular case: Eq. 1 exactly
+    g = pn_graph(4)
+    rep = utilization(g)
+    assert saturation_report(g, "uniform").theta == pytest.approx(
+        g.max_degree * rep.u / rep.kbar, abs=1e-9)
+
+
+def test_uniform_valiant_generalizes_valiant_report():
+    """The two rank-1 Valiant phases on uniform traffic reproduce the
+    analytic valiant_report: 2x loads, same u, 2x k̄, half the theta."""
+    g = build_topology("demi_pn", 5)
+    base = saturation_report(g, "uniform")
+    val = saturation_report(g, "uniform", routing="valiant")
+    ref = valiant_report(g)
+    assert val.u == pytest.approx(ref.u, abs=1e-9)
+    assert val.kbar_eff == pytest.approx(ref.kbar, abs=1e-9)
+    assert val.theta == pytest.approx(base.theta / 2.0, abs=1e-9)
+    np.testing.assert_allclose(val.loads, 2.0 * base.loads, rtol=1e-9)
+
+
+def test_valiant_bounds_adversarial_patterns():
+    """Valiant's guarantee: theta under ANY pattern stays within the
+    uniform two-phase bound, while minimal routing collapses on the
+    torus tornado (the paper's balance argument, quantitatively)."""
+    g = torus3d_graph(4, 4, 4)
+    uni = saturation_report(g, "uniform")
+    tor_min = saturation_report(g, "tornado")
+    tor_val = saturation_report(g, "tornado", routing="valiant")
+    assert tor_min.u < 0.5                       # minimal routing unbalanced
+    assert tor_val.u == pytest.approx(1.0, abs=1e-9)  # randomization rebalances
+    assert tor_val.theta >= uni.theta / 2.5      # near the uniform/2 guarantee
+    assert tor_val.theta > tor_min.theta * 0.9
+
+
+def test_valiant_permutation_theta_is_exactly_half_uniform():
+    """For any fixed-point-free permutation demand (doubly stochastic),
+    both Valiant phases are exactly the uniform ensemble, so theta_valiant
+    == theta_uniform / 2 whatever permutation the adversary picks — the
+    paper's worst-case guarantee, exactly."""
+    for g in [pn_graph(4), torus3d_graph(4, 4, 1)]:
+        uni = saturation_report(g, "uniform")
+        for spec in ["tornado", "shift(1)", "shift(3)"]:  # all derangements
+            val = saturation_report(g, spec, routing="valiant")
+            assert val.theta == pytest.approx(uni.theta / 2.0, rel=1e-9), spec
+            np.testing.assert_allclose(val.loads, 2.0 * uni.loads, rtol=1e-9)
+
+
+def test_sweep_runs_acceptance_matrix():
+    """uniform + >= 4 non-uniform patterns, minimal + valiant, on the
+    paper's case-study topologies (small instances for test time)."""
+    assert len(DEFAULT_SWEEP) >= 5
+    for g in [pn_graph(3), oft_graph(3), torus3d_graph(3, 3, 3),
+              dragonfly_graph(2)]:
+        reports, summary = saturation_sweep(g)
+        assert len(reports) == 2 * len(DEFAULT_SWEEP)
+        for rep in reports:
+            assert rep.theta > 0 and 0 < rep.u <= 1 + 1e-12
+        assert set(summary) == {"minimal", "valiant"}
+        thetas = [r.theta for r in reports if r.routing == "minimal"]
+        assert summary["minimal"]["min_theta"] == pytest.approx(min(thetas))
+        assert summary["minimal"]["worst_pattern"] in [
+            r.pattern for r in reports]
+
+
+def test_saturation_report_rejects_bad_routing():
+    with pytest.raises(ValueError, match="routing"):
+        saturation_report(pn_graph(2), "uniform", routing="teleport")
+
+
+def test_custom_pattern_object():
+    g = torus3d_graph(4, 1, 1)
+
+    def build(graph, active):
+        d = np.zeros((graph.n, graph.n))
+        d[active[0], active[-1]] = 2.0
+        return d
+
+    rep = saturation_report(g, TrafficPattern("point2point", build))
+    assert rep.pattern == "point2point"
+    assert rep.theta > 0
+
+
+# ---------------------------------------------------------------------------
+# Fabric wiring
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_pattern_bw_uniform_matches_eq1():
+    # regular fabric: theta-based bw == Eq. 1's Δ·u/k̄-based node_uniform_bw
+    fab = make_fabric("pn", args=(4,), terminals_per_router=2)
+    assert fab.pattern_node_bw("uniform") == pytest.approx(
+        fab.node_uniform_bw, rel=1e-9)
+    assert fab.pattern_kbar("uniform") == pytest.approx(fab.kbar, abs=1e-9)
+
+
+def test_fabric_pattern_bw_uniform_consistent_on_dragonfly():
+    """Dragonfly's uniform stats are canonical l-g-l (Table 2); the
+    pattern path must NOT silently swap in shortest-path routing for
+    semantically identical uniform traffic."""
+    fab = FabricModel(dragonfly_graph(3))
+    assert fab.pattern_node_bw("uniform") == pytest.approx(
+        fab.node_uniform_bw, rel=1e-12)
+    assert fab.pattern_node_bw("uniform", routing="valiant") == pytest.approx(
+        fab.node_uniform_bw / 2.0, rel=1e-12)
+    assert fab.pattern_kbar("uniform") == fab.kbar
+
+
+def test_fabric_pattern_report_cached():
+    fab = FabricModel(torus3d_graph(3, 3, 1))
+    r1 = fab.pattern_report("tornado")
+    r2 = fab.pattern_report("tornado")
+    assert r1 is r2
+    # ad-hoc TrafficPattern objects must not alias the spec cache by name
+    def one_pair(g, active):
+        d = np.zeros((g.n, g.n))
+        d[active[0], active[1]] = 1.0
+        return d
+
+    r3 = fab.pattern_report(TrafficPattern("tornado", one_pair))
+    assert r3 is not r1
+    assert r3.total_demand != pytest.approx(r1.total_demand)
+
+
+def test_fabric_pattern_report_large_graph_guard():
+    fab = FabricModel(torus3d_graph(3, 3, 1))
+    fab.PATTERN_MAX_N = 4
+    with pytest.raises(ValueError, match="smaller instance"):
+        fab.pattern_report("tornado2")  # never parsed: size guard first
+
+
+def test_collective_time_under_adversarial_pattern():
+    """A collective whose traffic lands bit-reversal-shaped on a torus
+    takes longer than at uniform saturation; Valiant routing recovers it
+    (minimal theta 0.6 vs valiant ~1.04 on the 4^3 torus)."""
+    fab = FabricModel(torus3d_graph(4, 4, 4))
+    n, b = fab.graph.n, 1e9
+    base = collective_time(fab, "all-reduce", b, n)
+    hot = collective_time(fab, "all-reduce", b, n, pattern="bit_reversal")
+    val = collective_time(fab, "all-reduce", b, n, pattern="bit_reversal",
+                          routing="valiant")
+    assert hot.bandwidth_s > base.bandwidth_s
+    assert val.bandwidth_s < hot.bandwidth_s
+    assert base.total_s == pytest.approx(
+        collective_time(fab, "all-reduce", b, n, pattern="uniform").total_s,
+        rel=1e-9)
