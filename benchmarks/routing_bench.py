@@ -1,0 +1,69 @@
+"""Adversarial routing-model benchmarks: the PolarFly-style comparison.
+
+For each case-study topology (the paper's PN / demi-PN / OFT against the
+torus and dragonfly reference points) run the adversarial harness
+(repro.core.adversary): theta for every named adversary pattern plus the
+worst sampled permutation, under minimal, Valiant, and UGAL routing.
+``benchmarks.run --only routing`` serializes the table into BENCH_3.json.
+
+The headline number per topology is UGAL's worst-case theta — the
+throughput guarantee an adaptive router extracts, which neither pure
+bracket reports: minimal collapses on structured adversaries, Valiant
+halves uniform throughput, and UGAL's blend sits at or above both
+everywhere.  The 8x16 torus case is the textbook demonstration: on
+tornado its blend optimum is interior (alpha ~0.40), strictly above both
+pure routings, while on the paper's arc-transitive PN the blend never
+needs the detour (alpha = 1 on uniform, theta_ugal == theta_minimal).
+
+``max_rel_err`` per topology checks two exact identities of the blend —
+theta_ugal >= max(theta_minimal, theta_valiant) on every pattern, and
+theta_ugal == theta_minimal on uniform — so a regression in the routing
+subsystem fails the benchmark run loudly (see run.py --err-budget).
+"""
+
+from __future__ import annotations
+
+from repro.core import demi_pn_graph, oft_graph, pn_graph
+from repro.core.adversary import (DEFAULT_ADVERSARY_PATTERNS, DEFAULT_MODELS,
+                                  adversarial_report)
+from repro.core.reference import dragonfly_graph
+from repro.fabric.model import torus3d_graph
+
+N_RANDOM = 8  # sampled permutations per (topology, model) worst-case search
+
+
+def routing_cases():
+    return [
+        ("pn16", pn_graph(16)),
+        ("demi_pn16", demi_pn_graph(16)),
+        ("oft4", oft_graph(4)),            # leaf-restricted (Section 6)
+        ("torus3d_444", torus3d_graph(4, 4, 4)),
+        ("torus2d_8x16", torus3d_graph(8, 16, 1)),  # tornado's home ground
+        ("dragonfly3", dragonfly_graph(3)),
+    ]
+
+
+def routing_one(g, patterns=DEFAULT_ADVERSARY_PATTERNS,
+                models=DEFAULT_MODELS, n_random=N_RANDOM):
+    """(rows, worst, max_rel_err) for one topology.
+
+    ``max_rel_err`` is the largest violation of the blend identities:
+    how far theta_ugal falls below max(theta_minimal, theta_valiant) on
+    any pattern (must be >= 0 up to round-off) and how far uniform
+    theta_ugal drifts from theta_minimal (must be equal — alpha = 1)."""
+    rows, worst = adversarial_report(g, patterns=patterns, models=models,
+                                     n_random=n_random)
+    by_pattern: dict[str, dict[str, float]] = {}
+    for r in rows:
+        by_pattern.setdefault(r["pattern"], {})[r["routing"]] = r["theta"]
+    err = 0.0
+    for pattern, cells in by_pattern.items():
+        if "ugal" not in cells:
+            continue
+        pure = [v for k, v in cells.items() if k in ("minimal", "valiant")]
+        if pure:
+            err = max(err, (max(pure) - cells["ugal"]) / max(pure))
+        if pattern == "uniform" and "minimal" in cells:
+            err = max(err, abs(cells["ugal"] - cells["minimal"])
+                      / cells["minimal"])
+    return rows, worst, err

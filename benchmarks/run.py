@@ -1,13 +1,18 @@
-"""Benchmark harness: one entry per paper table/figure + the fabric planner
-+ the roofline summary.  Prints ``name,us_per_call,derived`` CSV rows where
-``derived`` is the headline validation number for that artifact (max
-relative error vs. the paper, or the key reproduced quantity).
+"""Benchmark harness: one entry per paper table/figure + the traffic and
+adversarial-routing sweeps + the fabric planner + the roofline summary.
+Prints ``name,us_per_call,derived`` CSV rows where ``derived`` is the
+headline validation number for that artifact (max relative error vs. the
+paper, or the key reproduced quantity).
 
 ``--json PATH`` additionally records per-entry wall time and the numeric
 ``max_rel_err`` (where the artifact has one) so future changes have a perf
-trajectory to regress against:
+trajectory to regress against, and the run exits nonzero when any entry's
+``max_rel_err`` exceeds ``--err-budget`` (default 0.25) — a reproduction
+or routing-invariant regression fails CI loudly instead of only being
+recorded:
 
     python -m benchmarks.run --json BENCH_topology.json --only tables
+    python -m benchmarks.run --json BENCH_3.json --only routing
 
 The arc-load engine behind the tables is selected by REPRO_PERF (see
 repro.perf); e.g. ``REPRO_PERF=util_engine=naive`` times the reference
@@ -19,6 +24,7 @@ from __future__ import annotations
 import argparse
 import json
 import platform
+import sys
 import time
 
 
@@ -39,10 +45,16 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write per-entry wall time + max_rel_err as JSON")
-    ap.add_argument("--only", choices=["tables", "figures", "traffic", "all"],
+    ap.add_argument("--only",
+                    choices=["tables", "figures", "traffic", "routing", "all"],
                     default="all",
-                    help="restrict to the paper tables, figures, or the "
-                         "traffic-pattern saturation sweep")
+                    help="restrict to the paper tables, figures, the "
+                         "traffic-pattern saturation sweep, or the "
+                         "adversarial routing-model table")
+    ap.add_argument("--err-budget", type=float, default=0.25, metavar="E",
+                    help="fail (exit 1) when any entry's max_rel_err exceeds "
+                         "E instead of only recording it (negative: record "
+                         "only)")
     args = ap.parse_args(argv)
 
     from . import paper_tables as tabs
@@ -65,6 +77,20 @@ def main(argv=None) -> None:
                                   f" valiant={o[1]['valiant']['min_theta']:.4f}"))
             records[-1]["patterns"] = out[0]
             records[-1]["summary"] = out[1]
+
+    if args.only in ("routing", "all"):
+        from . import routing_bench as rb
+
+        for case_name, g in rb.routing_cases():
+            out = _run(records, f"routing[{case_name}]",
+                       lambda g=g: rb.routing_one(g),
+                       lambda o: (f"ugal_worst={o[1]['ugal']['min_theta']:.4f}"
+                                  f"@{o[1]['ugal']['worst_pattern']}"
+                                  f" min={o[1]['minimal']['min_theta']:.4f}"
+                                  f" val={o[1]['valiant']['min_theta']:.4f}"),
+                       err_of=lambda o: o[2])
+            records[-1]["rows"] = out[0]
+            records[-1]["worst"] = out[1]
 
     if args.only in ("figures", "all"):
         from . import paper_figures as figs
@@ -128,6 +154,15 @@ def main(argv=None) -> None:
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {args.json} ({len(records)} entries)")
+
+    if args.err_budget >= 0:
+        bad = [r for r in records
+               if r.get("max_rel_err", 0.0) > args.err_budget]
+        if bad:
+            names = {r["name"]: r["max_rel_err"] for r in bad}
+            print(f"# FAIL: max_rel_err over budget {args.err_budget}: "
+                  f"{names}", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

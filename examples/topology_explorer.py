@@ -7,6 +7,8 @@ Examples:
   PYTHONPATH=src python examples/topology_explorer.py --compare 10000 --radix 48
   PYTHONPATH=src python examples/topology_explorer.py --topology pn --param 8 \\
       --patterns "uniform,tornado,bit_reversal,hot_region(0.2,4)"
+  PYTHONPATH=src python examples/topology_explorer.py --topology pn --param 8 \\
+      --patterns --routing ugal
 """
 
 import argparse
@@ -65,16 +67,27 @@ def inspect(name: str, param: int, delta0: float | None):
     return g
 
 
-def patterns_table(g, specs):
+def patterns_table(g, specs, routing=None):
+    """Theta/u per pattern under minimal and Valiant, plus an extra column
+    for ``routing`` (e.g. "ugal": the adaptive blend and its alpha)."""
+    extra = None if routing in (None, "minimal", "valiant") else routing
     print(f"{g.name}: saturation throughput theta (per-node injection, "
           f"link-equivalents) and balance u by pattern")
-    print(f"{'pattern':28s} {'theta_min':>9s} {'u_min':>7s} "
-          f"{'theta_val':>9s} {'u_val':>7s} {'kbar_eff':>8s}")
+    head = (f"{'pattern':28s} {'theta_min':>9s} {'u_min':>7s} "
+            f"{'theta_val':>9s} {'u_val':>7s} {'kbar_eff':>8s}")
+    if extra:
+        head += f" {'theta_' + extra[:4]:>10s} {'alpha':>6s}"
+    print(head)
     for spec in specs:
         rmin = saturation_report(g, spec, routing="minimal")
         rval = saturation_report(g, spec, routing="valiant")
-        print(f"{rmin.pattern:28s} {rmin.theta:9.4f} {rmin.u:7.4f} "
-              f"{rval.theta:9.4f} {rval.u:7.4f} {rmin.kbar_eff:8.4f}")
+        line = (f"{rmin.pattern:28s} {rmin.theta:9.4f} {rmin.u:7.4f} "
+                f"{rval.theta:9.4f} {rval.u:7.4f} {rmin.kbar_eff:8.4f}")
+        if extra:
+            rx = saturation_report(g, spec, routing=extra)
+            alpha = "" if rx.alpha is None else f"{rx.alpha:6.3f}"
+            line += f" {rx.theta:10.4f} {alpha:>6s}"
+        print(line)
 
 
 def compare(terminals: int, radix: int):
@@ -100,6 +113,11 @@ def main():
                     help="comma-separated traffic patterns to stress the "
                          "topology with (default sweep when bare); e.g. "
                          "'uniform,tornado,hot_region(0.2,4)'")
+    ap.add_argument("--routing", default=None, metavar="MODEL",
+                    help="extra routing model column for the patterns "
+                         "table (any repro.core.routing spec, e.g. 'ugal' "
+                         "or 'ugal(source)'); minimal and Valiant always "
+                         "print")
     args = ap.parse_args()
     if args.topology:
         g = inspect(args.topology, args.param, args.delta0)
@@ -108,7 +126,7 @@ def main():
             # split on commas outside parentheses: hot_region(0.2,4) is one spec
             specs = [s.strip() for s in
                      re.split(r",(?![^(]*\))", args.patterns) if s.strip()]
-            patterns_table(g, specs)
+            patterns_table(g, specs, routing=args.routing)
     if args.compare:
         compare(args.compare, args.radix)
     if not args.topology and not args.compare:

@@ -1,15 +1,18 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 validation + a bounded smoke slice of the slow
-# JAX suites + the benchmark JSON artifact.
+# JAX suites + the benchmark JSON artifacts.
 #
-#   scripts/ci.sh            # tier-1 + slow smoke + BENCH_2.json
+#   scripts/ci.sh            # tier-1 + slow smoke + BENCH_2.json + BENCH_3.json
 #   scripts/ci.sh --fast     # tier-1 only
 #
 # The slow smoke subset pins ONE pallas kernel shape and ONE multi-device
 # system config so regressions in the heavyweight paths surface without
 # paying for the full sweep (`pytest -m slow` runs everything).  Each
 # phase runs under `timeout` so a wedged XLA compile fails the build
-# instead of hanging it.
+# instead of hanging it.  benchmarks.run itself exits nonzero when any
+# table's max_rel_err exceeds its --err-budget (default 0.25), so a
+# paper-reproduction or routing-invariant regression fails the build
+# without post-processing.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -19,6 +22,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 TIER1_BUDGET="${CI_TIER1_BUDGET:-600}"     # seconds
 SLOW_BUDGET="${CI_SLOW_BUDGET:-600}"       # seconds
 BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"     # seconds
+ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}" # seconds
 
 echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
 timeout "$TIER1_BUDGET" python -m pytest -x -q
@@ -48,10 +52,11 @@ tables["total_seconds"] = round(tables["total_seconds"]
                                 + traffic["total_seconds"], 6)
 json.dump(tables, open("BENCH_2.json", "w"), indent=2)
 import os; os.remove("BENCH_2_traffic.json")
-errs = [e for e in tables["entries"] if e.get("max_rel_err", 0) > 0.25]
-assert not errs, f"paper reproduction drifted: {errs}"
 print(f"BENCH_2.json: {len(tables['entries'])} entries, "
       f"{tables['total_seconds']:.1f}s total")
 EOF
+
+echo "== benchmarks: adversarial routing table -> BENCH_3.json (budget ${ROUTING_BUDGET}s) =="
+timeout "$ROUTING_BUDGET" python -m benchmarks.run --json BENCH_3.json --only routing
 
 echo "== ci.sh green =="

@@ -38,7 +38,22 @@ from .reference import (
     random_regular_graph,
     turan_graph,
 )
+from .adversary import (
+    AdversaryReport,
+    adversarial_report,
+    adversarial_table,
+    worst_case,
+)
 from .registry import TOPOLOGIES, build_topology
+from .routing import (
+    ROUTINGS,
+    RoutingModel,
+    RoutingResult,
+    blend_optimum,
+    evaluate_models,
+    make_routing,
+    register_routing,
+)
 from .select import Realization, all_realizations, realizations_for_family, select_topology
 from .traffic import (
     DEFAULT_SWEEP,
@@ -46,6 +61,7 @@ from .traffic import (
     SaturationReport,
     TrafficPattern,
     make_pattern,
+    matrix_pattern,
     register_pattern,
     saturation_report,
     saturation_sweep,

@@ -28,7 +28,10 @@ Patterns are registered in ``PATTERNS`` and built by name (with optional
   bit_reversal        rank i -> bit-reversed rank (FFT / transpose phases)
   transpose           (r, c) -> (c, r) on the largest square rank grid
   shift(k)            rank i -> i+k mod m (neighbor exchange; halo phases)
-  tornado             shift by m//2 — the classic torus worst case
+  tornado             the classic one-directional worst case (Dally-
+                      Towles): shift by ceil(k/2)-1 within coordinate
+                      0's ring on a torus, by ceil(m/2)-1 on the rank
+                      ring elsewhere
   random_permutation(seed)  a sampled permutation (Valiant's average case)
   hot_region(frac, boost)   all-to-all with a boosted hot target region
   collective(op)      demand of one fabric collective (see below)
@@ -43,24 +46,30 @@ topology into a single hot cycle.
 ``saturation_report(g, pattern, routing=...)`` evaluates one pattern;
 ``saturation_sweep`` runs a battery and reports the worst case — the
 quantitative form of the paper's "suboptimal designs" claim.
+
+Routing models live in repro.core.routing: ``routing`` accepts any
+registered spec (``"minimal"``, ``"valiant"``, ``"ugal"``,
+``"ugal(source)"``, or a RoutingModel instance); ``saturation_report`` is
+a thin shim that normalizes the pattern's demand and wraps the model's
+RoutingResult.  The adversarial search over patterns (worst-found
+permutations per routing model) is repro.core.adversary.
 """
 
 from __future__ import annotations
 
 import math
-import re
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
 from .graph import Graph
-from .utilization import arc_loads_weighted
+from .routing import make_routing, parse_spec
 
 __all__ = [
     "TrafficPattern", "PATTERNS", "register_pattern", "make_pattern",
-    "SaturationReport", "saturation_report", "saturation_sweep",
-    "DEFAULT_SWEEP", "COLLECTIVE_OPS",
+    "matrix_pattern", "SaturationReport", "saturation_report",
+    "saturation_sweep", "DEFAULT_SWEEP", "COLLECTIVE_OPS",
 ]
 
 
@@ -171,13 +180,32 @@ def _shift(k: int = 1) -> TrafficPattern:
 
 @register_pattern("tornado")
 def _tornado() -> TrafficPattern:
+    # The classic Dally-Towles adversary: shift by ceil(k/2)-1 — one hop
+    # SHORT of halfway — so every packet travels the same direction and
+    # minimal routing loads only half the ring's arcs.  On a k-ary n-cube
+    # the textbook form shifts coordinate 0 within its own ring (each node
+    # (x, y, ...) sends to (x + ceil(k/2)-1 mod k, y, ...)); on anything
+    # else the shift applies to the rank ring.  (PR 2 shipped the flat
+    # rank shift(m//2), which splits both directions — theta 1.0 on the
+    # 4^3 torus, no adversary at all.)
     def build(g, active):
+        dims = g.meta.get("dims")
+        if (g.meta.get("family") == "torus3d" and dims
+                and len(active) == g.n):
+            coords = list(np.unravel_index(np.arange(g.n), dims))
+            d = next((i for i, s in enumerate(dims) if s >= 2), 0)
+            k = dims[d]
+            coords[d] = (coords[d] + max(1, (k + 1) // 2 - 1)) % k
+            perm = np.ravel_multi_index(coords, dims)
+            return _perm_demand(g.n, active, perm)
         m = len(active)
-        perm = (np.arange(m) + m // 2) % m
+        k = max(1, (m + 1) // 2 - 1)
+        perm = (np.arange(m) + k) % m
         return _perm_demand(g.n, active, perm)
 
     return TrafficPattern("tornado", build,
-                          "half-ring shift — the classic torus adversary")
+                          "one-directional near-half-ring shift "
+                          "(the classic torus adversary)")
 
 
 @register_pattern("random_permutation")
@@ -238,30 +266,37 @@ def _collective(op: str = "all-reduce", bytes_global: float = 1.0) -> TrafficPat
                           f"one {op} of {bytes_global:g} bytes (global)")
 
 
-_SPEC_RE = re.compile(r"^\s*([A-Za-z_][A-Za-z0-9_-]*)\s*(?:\((.*)\))?\s*$")
+def matrix_pattern(demand, name: str | None = None) -> TrafficPattern:
+    """Wrap a raw (N, N) demand matrix as an ad-hoc TrafficPattern, so
+    the adversary harness and placement work can feed explicit matrices
+    through ``saturation_report`` without registering a builder.  The
+    matrix is copied at build time (``demand()`` zeroes the diagonal)."""
+    arr = np.asarray(demand, dtype=np.float64)
+    if arr.ndim != 2 or arr.shape[0] != arr.shape[1]:
+        raise ValueError(f"demand matrix must be square (N, N), "
+                         f"got shape {arr.shape}")
+
+    def build(g, active):
+        if arr.shape != (g.n, g.n):
+            raise ValueError(f"demand matrix is {arr.shape}, graph has "
+                             f"N={g.n}")
+        return arr.copy()
+
+    label = name or f"matrix({arr.shape[0]}x{arr.shape[1]})"
+    return TrafficPattern(label, build, "explicit demand matrix")
 
 
 def make_pattern(spec) -> TrafficPattern:
     """Build a pattern from a registry name with optional arguments:
     ``"tornado"``, ``"shift(3)"``, ``"hot_region(0.2, 4)"``,
-    ``"collective(ring-all-reduce)"``.  Passes TrafficPattern through."""
+    ``"collective(ring-all-reduce)"``.  Passes TrafficPattern instances
+    through and wraps raw (N, N) arrays via :func:`matrix_pattern`."""
     if isinstance(spec, TrafficPattern):
         return spec
-    m = _SPEC_RE.match(str(spec))
-    if not m or m.group(1) not in PATTERNS:
-        raise ValueError(f"unknown traffic pattern {spec!r}; "
-                         f"options: {sorted(PATTERNS)}")
-    name, argstr = m.group(1), m.group(2)
-    args = []
-    for tok in filter(None, (t.strip() for t in (argstr or "").split(","))):
-        try:
-            args.append(int(tok))
-        except ValueError:
-            try:
-                args.append(float(tok))
-            except ValueError:
-                args.append(tok)
-    return PATTERNS[name](*args)
+    if isinstance(spec, (np.ndarray, list, tuple)) or (
+            hasattr(spec, "__array__") and not isinstance(spec, str)):
+        return matrix_pattern(spec)
+    return parse_spec(spec, PATTERNS, "traffic pattern")
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +323,7 @@ class SaturationReport:
     diameter: int    # longest hops traveled (Valiant: two-leg upper bound)
     total_demand: float
     loads: np.ndarray = field(repr=False)
+    alpha: float | None = None  # blend weight on minimal (ugal models)
 
 
 def _normalize_rows(demand: np.ndarray) -> np.ndarray:
@@ -297,64 +333,33 @@ def _normalize_rows(demand: np.ndarray) -> np.ndarray:
     return demand / peak
 
 
-def _valiant_demands(demand: np.ndarray, active: np.ndarray):
-    """Exact expected two-phase Valiant demand: every packet routes
-    s -> (uniform random intermediate m != endpoint, within the active
-    set) -> t.  Phase 1 spreads each source's row sum over the
-    intermediates, phase 2 collects each target's column sum from them —
-    two rank-1 matrices, so Valiant costs two weighted sweeps whatever the
-    pattern.  For uniform traffic this reproduces valiant_report exactly:
-    2x the minimal loads at 2x k̄."""
-    n = demand.shape[0]
-    m = len(active)
-    act = np.zeros(n, dtype=np.float64)
-    act[active] = 1.0
-    rs = demand.sum(axis=1)
-    cs = demand.sum(axis=0)
-    d1 = np.outer(rs, act) / (m - 1)
-    d2 = np.outer(act, cs) / (m - 1)
-    return d1, d2
-
-
 def saturation_report(g: Graph, pattern, routing: str = "minimal",
                       engine: str | None = None,
                       targets_mask: np.ndarray | None = None) -> SaturationReport:
-    """Evaluate one traffic pattern on ``g`` under minimal or Valiant
-    routing.  ``pattern`` is a spec for :func:`make_pattern` (or a
-    TrafficPattern); ``targets_mask`` defaults to the graph's leaf mask
-    for indirect networks."""
-    if routing not in ("minimal", "valiant"):
-        raise ValueError(f"routing must be 'minimal' or 'valiant', got {routing!r}")
+    """Evaluate one traffic pattern on ``g`` under one routing model.
+
+    ``pattern`` is a spec for :func:`make_pattern` (a registry name, a
+    TrafficPattern, or a raw (N, N) demand matrix); ``routing`` a spec for
+    repro.core.routing's :func:`make_routing` ("minimal", "valiant",
+    "ugal", "ugal(source)", or a RoutingModel); ``targets_mask`` defaults
+    to the graph's leaf mask for indirect networks."""
+    model = make_routing(routing)
     pat = make_pattern(pattern)
     if targets_mask is None:
         targets_mask = g.meta.get("leaf_mask")
     demand = _normalize_rows(pat.demand(g, targets_mask))
     total = float(demand.sum())
+    active = (np.arange(g.n) if targets_mask is None
+              else np.nonzero(np.asarray(targets_mask, dtype=bool))[0])
+    res = model.evaluate(g, demand, active, engine)
 
-    if routing == "minimal":
-        loads, kbar_eff, diam = arc_loads_weighted(g, demand, engine=engine)
-    else:
-        active = (np.arange(g.n) if targets_mask is None
-                  else np.nonzero(np.asarray(targets_mask, dtype=bool))[0])
-        d1, d2 = _valiant_demands(demand, active)
-        l1, k1, dm1 = arc_loads_weighted(g, d1, engine=engine)
-        if np.array_equal(d1, d2):  # e.g. uniform: both phases identical
-            l2, k2, dm2 = l1, k1, dm1
-        else:
-            l2, k2, dm2 = arc_loads_weighted(g, d2, engine=engine)
-        loads = l1 + l2
-        kbar_eff = k1 + k2  # both phases have total demand == sum(D)
-        # upper bound on the longest two-leg route: the worst phase-1 and
-        # phase-2 legs need not share an intermediate (tight on the
-        # vertex-transitive families)
-        diam = dm1 + dm2
-
-    mx = float(loads.max())
-    mean = float(loads.mean())
+    mx = float(res.loads.max())
+    mean = float(res.loads.mean())
     return SaturationReport(
-        pattern=pat.name, routing=routing, theta=1.0 / mx, u=mean / mx,
-        max_load=mx, mean_load=mean, kbar_eff=kbar_eff, diameter=int(diam),
-        total_demand=total, loads=loads)
+        pattern=pat.name, routing=model.name, theta=1.0 / mx, u=mean / mx,
+        max_load=mx, mean_load=mean, kbar_eff=res.kbar_eff,
+        diameter=int(res.diameter), total_demand=total, loads=res.loads,
+        alpha=res.alpha)
 
 
 DEFAULT_SWEEP = ("uniform", "bit_reversal", "transpose", "tornado",

@@ -905,21 +905,52 @@ def arc_loads(g: Graph, sources=None, targets_mask: np.ndarray | None = None,
     return loads, kbar, diam
 
 
-def arc_loads_weighted(g: Graph, demand: np.ndarray,
+def _uniform_demand_split(demand: np.ndarray):
+    """Detect a uniform-shaped demand: ``w * (ones - I)`` on some active
+    vertex set, zero elsewhere.  Returns ``(w, active_mask)`` or None.
+
+    Such a matrix commutes with the graph's full automorphism group (any
+    subgroup preserving the active set), so the orbit shortcut of
+    :func:`arc_loads` applies: the weighted sweep reduces to the uniform
+    one scaled by w."""
+    rows = demand.any(axis=1)
+    if not np.array_equal(rows, demand.any(axis=0)):
+        return None
+    active = np.nonzero(rows)[0]
+    if len(active) < 2:
+        return None
+    block = demand[np.ix_(active, active)]
+    w = block[0, 1]
+    if w <= 0.0:
+        return None
+    expect = np.full(block.shape, w)
+    np.fill_diagonal(expect, 0.0)
+    if not np.array_equal(block, expect):
+        return None
+    return w, rows
+
+
+def arc_loads_weighted(g: Graph, demand,
                        engine: str | None = None
                        ) -> tuple[np.ndarray, float, int]:
     """Per-arc load under an arbitrary traffic matrix, split across all
     shortest paths (the demand-matrix generalization of Theorem 3.9).
 
     ``demand[s, t]`` is the traffic s injects for t (any nonnegative
-    units); the diagonal is ignored.  Returns ``(loads, kbar, diameter)``
-    where ``kbar`` is the demand-weighted mean hop count
-    ``sum(D * dist) / sum(D)`` and ``diameter`` the longest hop count any
-    demand actually travels.  ``engine`` as in :func:`arc_loads`, except
-    ``orbit`` (the automorphism shortcut assumes uniform traffic) — under
-    ``auto``/``orbit`` the exact engines run instead.
+    units); the diagonal is ignored.  A TrafficPattern instance (anything
+    with a ``demand(g)`` method) is accepted directly and built against
+    ``g``.  Returns ``(loads, kbar, diameter)`` where ``kbar`` is the
+    demand-weighted mean hop count ``sum(D * dist) / sum(D)`` and
+    ``diameter`` the longest hop count any demand actually travels.
+    ``engine`` as in :func:`arc_loads`; under ``auto``/``orbit`` a
+    uniform-shaped demand (``w * (ones - I)`` over an active set — the
+    only matrices the automorphism shortcut is exact for) routes through
+    the orbit path of :func:`arc_loads` scaled by w, and anything else
+    runs the exact engines.
     """
     n = g.n
+    if hasattr(demand, "demand") and callable(demand.demand):
+        demand = demand.demand(g)  # TrafficPattern duck-type
     demand = np.array(demand, dtype=np.float64)  # private copy, diag zeroed
     if demand.shape != (n, n):
         raise ValueError(f"demand must be ({n}, {n}), got {demand.shape}")
@@ -937,6 +968,21 @@ def arc_loads_weighted(g: Graph, demand: np.ndarray,
     eng = (engine if engine is not None else flags().util_engine).lower()
     if eng not in _ENGINES:
         raise ValueError(f"unknown engine {eng!r}; options: {_ENGINES}")
+
+    if eng == "orbit" or (eng == "auto" and flags().util_orbits):
+        uni = _uniform_demand_split(demand)
+        if uni is not None:
+            w, mask = uni
+            try:
+                loads, kbar, diam = arc_loads(g, targets_mask=mask,
+                                              engine=eng)
+            except ValueError:
+                # engine="orbit" on a family without known generators:
+                # keep the weighted path's documented contract (the exact
+                # engines run instead of raising)
+                pass
+            else:
+                return loads * w, kbar, diam
 
     if eng == "naive":
         res = _arc_loads_naive(g, sources, targets_mask, demand)

@@ -13,10 +13,13 @@ covers the small-message regime.
 
 Every entry point takes an optional ``pattern`` (any repro.core.traffic
 spec, e.g. ``"hot_region(0.2,4)"`` or ``"collective(ring-all-reduce)"``)
-and ``routing`` ("minimal" | "valiant"): the saturation throughput of that
-pattern then replaces Eq. 1's uniform Δ·u/k̄ and its demand-weighted hop
-count replaces k̄ in the latency term — collectives priced under the
-congestion their actual schedule (or competing background traffic) causes.
+and ``routing`` (any repro.core.routing model: "minimal", "valiant",
+"ugal", "ugal(source)"): the saturation throughput of that pattern under
+that routing then replaces Eq. 1's uniform Δ·u/k̄ and its demand-weighted
+hop count replaces k̄ in the latency term — collectives priced under the
+congestion their actual schedule (or competing background traffic)
+causes, with "ugal" modeling the adaptive minimal/Valiant choice a real
+large-radix router makes per packet.
 """
 
 from __future__ import annotations

@@ -86,10 +86,12 @@ class FabricModel:
         (repro.core.traffic), cached per (spec, routing) for registry-spec
         strings (ad-hoc TrafficPattern objects are evaluated fresh).
 
-        Non-uniform patterns always use shortest-path (or Valiant)
-        routing, including on dragonfly — the canonical l-g-l convention
-        this model applies to dragonfly's UNIFORM stats has no published
-        per-pattern counterpart."""
+        ``routing`` is any registered routing model (repro.core.routing):
+        "minimal", "valiant", "ugal", "ugal(source)", ...  Non-uniform
+        patterns always use the model's own path accounting, including on
+        dragonfly — the canonical l-g-l convention this model applies to
+        dragonfly's UNIFORM stats has no published per-pattern
+        counterpart."""
         from ..core.traffic import make_pattern, saturation_report
         if self.graph.n > self.PATTERN_MAX_N:
             raise ValueError(
@@ -114,6 +116,21 @@ class FabricModel:
         from ..core.traffic import make_pattern
         return make_pattern(pattern).name == "uniform"
 
+    @staticmethod
+    def _uniform_routing_kind(routing) -> str:
+        """Classify a routing spec for the uniform fast path: "minimal"
+        (also any UGAL blend — on uniform traffic the Valiant loads are
+        exactly 2x the minimal loads, so the theta-maximizing blend is
+        alpha = 1, pure minimal), "valiant", or "other" (unknown models
+        evaluate through pattern_report)."""
+        from ..core.routing import make_routing
+        name = make_routing(routing).name  # validates the spec
+        if name == "valiant":
+            return "valiant"
+        if name in ("minimal", "ugal", "ugal(source)"):
+            return "minimal"
+        return "other"
+
     def pattern_node_bw(self, pattern, routing: str = "minimal") -> float:
         """bytes/s each TERMINAL can inject at saturation under an arbitrary
         traffic pattern — the generalized Eq. (1): theta replaces Δ·u/k̄.
@@ -122,10 +139,13 @@ class FabricModel:
         conventions are preserved exactly: dragonfly keeps its canonical
         l-g-l Table-2 stats (shortest-path theta is ~35% lower there) and
         Eq. 1's Δ (not mean-degree) convention holds on irregular graphs;
-        Valiant halves it, per the uniform two-phase identity."""
+        Valiant halves it, and UGAL reduces to minimal (blend alpha = 1 on
+        uniform traffic), per the uniform two-phase identity."""
         if self._is_uniform(pattern):
-            bw = self.node_uniform_bw
-            return bw / 2.0 if routing == "valiant" else bw
+            kind = self._uniform_routing_kind(routing)
+            if kind != "other":
+                bw = self.node_uniform_bw
+                return bw / 2.0 if kind == "valiant" else bw
         rep = self.pattern_report(pattern, routing)
         return rep.theta * self.link_bytes_per_s / self.terminals_per_router
 
@@ -134,7 +154,9 @@ class FabricModel:
         Valiant); prices the latency term of small-message collectives.
         Uniform keeps the fabric's own k̄ convention (see pattern_node_bw)."""
         if self._is_uniform(pattern):
-            return 2.0 * self.kbar if routing == "valiant" else self.kbar
+            kind = self._uniform_routing_kind(routing)
+            if kind != "other":
+                return 2.0 * self.kbar if kind == "valiant" else self.kbar
         return self.pattern_report(pattern, routing).kbar_eff
 
 

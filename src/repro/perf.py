@@ -39,7 +39,12 @@ Topology-analytics flags (the batched all-source BFS/Brandes engine behind
                   orbit (1–2 for PN/demi-PN/MMS/Hamming, 2 for OFT column
                   symmetry) and reconstructs exact per-arc loads from
                   arc-orbit averages; it is exact, not approximate — this
-                  flag exists to measure the exact engines.
+                  flag exists to measure the exact engines.  It also
+                  gates the weighted path's uniform-demand rerouting
+                  (``arc_loads_weighted`` detects ``w * (ones - I)``
+                  demand — incl. spread collectives and the Valiant
+                  phases of any permutation — and runs the uniform
+                  engines instead of a full weighted sweep).
   util_dense_max=N — largest vertex count that uses dense (N, N)
                   adjacency GEMMs (default 6144); beyond it auto prefers
                   jax (if importable, up to util_jax_max) then CSR.

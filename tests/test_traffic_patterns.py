@@ -130,8 +130,10 @@ def test_uniform_valiant_generalizes_valiant_report():
 def test_valiant_bounds_adversarial_patterns():
     """Valiant's guarantee: theta under ANY pattern stays within the
     uniform two-phase bound, while minimal routing collapses on the
-    torus tornado (the paper's balance argument, quantitatively)."""
-    g = torus3d_graph(4, 4, 4)
+    torus tornado (the paper's balance argument, quantitatively).  The
+    2D 8x8 torus is the literature's tornado setting: one-directional
+    ring overload that minimal routing cannot spread."""
+    g = torus3d_graph(8, 8, 1)
     uni = saturation_report(g, "uniform")
     tor_min = saturation_report(g, "tornado")
     tor_val = saturation_report(g, "tornado", routing="valiant")
