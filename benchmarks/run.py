@@ -46,11 +46,13 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write per-entry wall time + max_rel_err as JSON")
     ap.add_argument("--only",
-                    choices=["tables", "figures", "traffic", "routing", "all"],
+                    choices=["tables", "figures", "traffic", "routing",
+                             "placement", "all"],
                     default="all",
                     help="restrict to the paper tables, figures, the "
-                         "traffic-pattern saturation sweep, or the "
-                         "adversarial routing-model table")
+                         "traffic-pattern saturation sweep, the "
+                         "adversarial routing-model table, or the "
+                         "placement strategy/fragmentation table")
     ap.add_argument("--err-budget", type=float, default=0.25, metavar="E",
                     help="fail (exit 1) when any entry's max_rel_err exceeds "
                          "E instead of only recording it (negative: record "
@@ -91,6 +93,21 @@ def main(argv=None) -> None:
                        err_of=lambda o: o[2])
             records[-1]["rows"] = out[0]
             records[-1]["worst"] = out[1]
+
+    if args.only in ("placement", "all"):
+        from . import placement_bench as pb
+
+        for case_name, g, mesh, axes, d0, exp in pb.placement_cases():
+            out = _run(records, f"placement[{case_name}]",
+                       lambda g=g, mesh=mesh, axes=axes, d0=d0, exp=exp:
+                           pb.placement_one(g, mesh, axes, d0, exp),
+                       lambda o: (f"ep_best={o[1]['ep_heavy']['best']}"
+                                  f"@{o[1]['ep_heavy']['best_theta']:.4f}"
+                                  f" lin={o[1]['ep_heavy']['linear_theta']:.4f}"
+                                  f" frag={o[1]['fragmentation']['best']}"),
+                       err_of=lambda o: o[2])
+            records[-1]["rows"] = out[0]
+            records[-1]["summary"] = out[1]
 
     if args.only in ("figures", "all"):
         from . import paper_figures as figs

@@ -15,6 +15,8 @@ import argparse
 import json
 import os
 
+import numpy as np
+
 from repro.fabric import StepProfile, plan
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -27,6 +29,16 @@ def main():
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--chips", type=int, default=10_000)
     ap.add_argument("--radix", type=int, default=64)
+    ap.add_argument("--mesh", default=None, metavar="MxD",
+                    help="place a (model, data) job mesh (e.g. 16x16) and "
+                         "rank fabrics by PLACED step time: the (profile, "
+                         "placement) demand matrix routed under --routing, "
+                         "busiest link serializing the step")
+    ap.add_argument("--placement", default="group",
+                    help="placement strategy for --mesh (fabric.placement "
+                         "registry: linear/group/random/orbit/greedy_swap)")
+    ap.add_argument("--routing", default="ugal",
+                    help="routing model for --mesh pricing")
     args = ap.parse_args()
 
     path = os.path.join(DRYRUN_DIR, f"{args.arch}__{args.shape}__pod1.json")
@@ -45,18 +57,28 @@ def main():
         print(f"  {k:20s} {v / 2**20:10.1f} MiB/device/step")
 
     prof = StepProfile.from_dryrun(rec)
-    rows = plan(prof, min_terminals=args.chips, max_radix=args.radix)
+    mesh = (tuple(int(t) for t in args.mesh.split("x"))
+            if args.mesh else None)
+    rows = plan(prof, min_terminals=args.chips, max_radix=args.radix,
+                mesh_shape=mesh, placement_strategy=args.placement,
+                routing=args.routing)
     print(f"\nfabric ranking for >= {args.chips} chips, radix <= {args.radix}"
-          f" (paper cost model + saturation collective model):")
+          f" (paper cost model + saturation collective model"
+          + (f"; {np.prod(mesh)}-chip job placed via {args.placement!r}, "
+               f"priced under {args.routing}" if mesh else "") + "):")
     hdr = ("fabric", "T", "R", "kbar", "u", "kbar/u", "comm ms/step",
-           "$/node", "W/node")
+           "$/node", "W/node", "placed ms")
     print(f"{hdr[0]:16s} {hdr[1]:>7s} {hdr[2]:>4s} {hdr[3]:>6s} {hdr[4]:>6s} "
-          f"{hdr[5]:>7s} {hdr[6]:>12s} {hdr[7]:>8s} {hdr[8]:>7s}")
+          f"{hdr[5]:>7s} {hdr[6]:>12s} {hdr[7]:>8s} {hdr[8]:>7s}"
+          + (f" {hdr[9]:>10s}" if mesh else ""))
     for r in rows:
+        placed = ("" if not mesh else
+                  f" {r['placed_comm_ms']:10.3f}" if "placed_comm_ms" in r
+                  else f" {'-':>10s}")
         print(f"{r['fabric']:16s} {r['terminals']:7d} {r['radix']:4d} "
               f"{r['kbar']:6.3f} {r['u']:6.3f} {r['kbar_over_u']:7.3f} "
               f"{r['step_comm_ms']:12.3f} {r['usd_per_node']:8.2f} "
-              f"{r['watts_per_node']:7.2f}")
+              f"{r['watts_per_node']:7.2f}{placed}")
     # Every fabric here is dimensioned for full bisection (Δ0 = Δ·u/k̄), so
     # step times land within a few %; the differentiator — the paper's whole
     # point — is $/W at equal throughput.

@@ -1,9 +1,13 @@
 """Placement demo: where should a 256-chip training job sit on the paper's
-demi-PN fabric?
+demi-PN fabric — under the routing it actually runs?
 
-Routes the job's collective schedule (DP ring + EP all-to-all, byte counts
-from a dry-run profile) over shortest paths for several chip->router
-placements and reports the max link load — §Fabric of EXPERIMENTS.md.
+Compiles the job's collective schedule (DP ring + EP all-to-all byte
+counts, dry-run-profile style) and a chip->router placement into a
+router-level demand matrix, scores it through the routing registry
+(minimal / valiant / ugal), and compares every registered placement
+strategy by theta — the per-chip saturation injection rate in Eq. 1's
+link-equivalent units — plus the worst case the adversarial harness finds
+over the routers the job occupies.  §Fabric of EXPERIMENTS.md.
 
 Run:  PYTHONPATH=src python examples/placement_demo.py --q 27 --delta0 14
 """
@@ -11,8 +15,7 @@ Run:  PYTHONPATH=src python examples/placement_demo.py --q 27 --delta0 14
 import argparse
 
 from repro.core import build_topology
-from repro.fabric.placement import (collective_traffic, evaluate_placements,
-                                    greedy_improve, link_loads, place_mesh)
+from repro.fabric import StepProfile, fragmentation_sweep, placement_search
 
 
 def main():
@@ -20,32 +23,58 @@ def main():
     ap.add_argument("--q", type=int, default=27, help="demi-PN order")
     ap.add_argument("--delta0", type=int, default=14)
     ap.add_argument("--ring-gb", type=float, default=4.1,
-                    help="DP ring payload per chip (GB)")
+                    help="DP all-reduce payload per chip (GB)")
     ap.add_argument("--a2a-gb", type=float, default=6.6,
                     help="EP all-to-all payload per chip (GB)")
-    ap.add_argument("--iters", type=int, default=150)
+    ap.add_argument("--routing", default="ugal",
+                    help="routing model to score under (minimal/valiant/ugal)")
+    ap.add_argument("--iters", type=int, default=60,
+                    help="greedy_swap descent iterations")
+    ap.add_argument("--adversary", action="store_true",
+                    help="also score each occupied router set against the "
+                         "worst pattern repro.core.adversary finds")
     args = ap.parse_args()
 
     g = build_topology("demi_pn", args.q)
     mesh, axes = (16, 16), ("data", "model")
-    spec = {"data": ("ring", args.ring_gb),
-            "model": ("all_to_all", args.a2a_gb)}
+    prof = StepProfile({"all-reduce": args.ring_gb * 1e9,
+                        "all-to-all": args.a2a_gb * 1e9})
     print(f"fabric: {g.name} ({g.n} routers, Δ0={args.delta0} -> "
           f"{g.n * args.delta0} terminals); job: 256 chips, "
-          f"{args.ring_gb} GB ring + {args.a2a_gb} GB a2a per chip")
+          f"{args.ring_gb} GB ring + {args.a2a_gb} GB a2a per chip; "
+          f"routing={args.routing}")
 
-    out = evaluate_placements(g, mesh, axes, args.delta0, spec)
-    for k, v in out.items():
-        print(f"  {k:7s} max={v['max']:9.2f} GB/link  mean={v['mean']:6.2f}")
+    out = placement_search(
+        g, mesh, axes, args.delta0, prof,
+        strategies=("linear", "group", "random", "orbit",
+                    f"greedy_swap({args.iters})"),
+        routing=args.routing, adversary=args.adversary)
+    for name, r in out["rows"].items():
+        alpha = "" if r["alpha"] is None else f"  alpha={r['alpha']:.3f}"
+        adv = ("" if "adv_theta" not in r
+               else f"  adv_theta={r['adv_theta']:.4f}@{r['adv_pattern']}")
+        print(f"  {name:18s} theta={r['theta']:7.4f}  "
+              f"max={r['max_bytes'] / 1e9:7.2f} GB/link{alpha}{adv}")
+    print(f"  => best: {out['best']} "
+          f"(theta {out['rows'][out['best']]['theta']:.4f} vs linear "
+          f"{out['rows']['linear']['theta']:.4f})")
 
-    traffic = collective_traffic(mesh, axes, spec)
-    p0 = place_mesh(g, mesh, axes, args.delta0, "random", seed=1)
-    p_opt, best = greedy_improve(p0, traffic, iters=args.iters, seed=2)
-    print(f"  greedy  max={best:9.2f} GB/link "
-          f"(from random {link_loads(p0, traffic)['max']:.2f})")
-    print("\n=> on a diameter-2 projective fabric, an under-subscribed job "
-          "wants to SPREAD (per-router injection bw = Δ·u/k̄ links, Eq. 1); "
-          "packing strategies that win on tori lose here.")
+    tmesh = mesh
+    while 2 * tmesh[0] * tmesh[1] > g.n * args.delta0:
+        tmesh = (tmesh[0] // 2, tmesh[1])  # halve the DP axis until 2 fit
+    frag = fragmentation_sweep(g, [(tmesh, axes, prof)] * 2, args.delta0,
+                               routing=args.routing, background="tornado")
+    fl = frag["layouts"]
+    print(f"\ntwo co-tenant jobs + tornado background "
+          f"({args.routing}): " +
+          "  ".join(f"{k}={v['theta']:.4f}" for k, v in fl.items()) +
+          f"  => {frag['best']}")
+    print("\n=> on a diameter-2 projective fabric an under-subscribed job "
+          "wants to SPREAD across routers (Eq. 1's per-router injection "
+          "budget), but co-tenants must not SHARE routers: packed beats "
+          "the fragmented interleaved schedule, while chip-major linear "
+          "splits every EP group — the placement-aware demand pipeline "
+          "prices all of it under the routing the fabric actually runs.")
 
 
 if __name__ == "__main__":

@@ -19,10 +19,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-TIER1_BUDGET="${CI_TIER1_BUDGET:-600}"     # seconds
-SLOW_BUDGET="${CI_SLOW_BUDGET:-600}"       # seconds
-BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"     # seconds
-ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}" # seconds
+TIER1_BUDGET="${CI_TIER1_BUDGET:-600}"         # seconds
+SLOW_BUDGET="${CI_SLOW_BUDGET:-600}"           # seconds
+BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"         # seconds
+ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}"     # seconds
+PLACEMENT_BUDGET="${CI_PLACEMENT_BUDGET:-300}" # seconds
 
 echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
 timeout "$TIER1_BUDGET" python -m pytest -x -q
@@ -58,5 +59,12 @@ EOF
 
 echo "== benchmarks: adversarial routing table -> BENCH_3.json (budget ${ROUTING_BUDGET}s) =="
 timeout "$ROUTING_BUDGET" python -m benchmarks.run --json BENCH_3.json --only routing
+
+echo "== benchmarks: placement strategy/fragmentation table -> BENCH_4.json (budget ${PLACEMENT_BUDGET}s) =="
+# benchmarks.run exits nonzero when the pipeline identities break (the
+# best non-linear strategy below the linear baseline on ep_heavy, packed
+# losing where it must win, or pn16's ep_heavy search not strictly
+# beating linear), mirroring the routing bench
+timeout "$PLACEMENT_BUDGET" python -m benchmarks.run --json BENCH_4.json --only placement
 
 echo "== ci.sh green =="

@@ -62,6 +62,7 @@ from .traffic import (
     TrafficPattern,
     make_pattern,
     matrix_pattern,
+    normalize_demand,
     register_pattern,
     saturation_report,
     saturation_sweep,

@@ -39,7 +39,7 @@ import numpy as np
 
 from .graph import Graph
 from .routing import evaluate_models, make_routing
-from .traffic import _normalize_rows, make_pattern
+from .traffic import make_pattern, normalize_demand
 
 __all__ = [
     "AdversaryReport", "worst_case", "adversarial_report",
@@ -63,11 +63,20 @@ class AdversaryReport:
 
 
 def _active_and_mask(g: Graph, targets_mask):
+    """Resolve the active vertex set.  ``targets_mask`` may be a boolean
+    (N,) mask or an integer array of vertex ids (e.g. a Placement's
+    occupied routers — fabric.placement feeds these to score how robust
+    a job's router set is to hostile tenant traffic)."""
     if targets_mask is None:
         targets_mask = g.meta.get("leaf_mask")
     if targets_mask is None:
         return np.arange(g.n), None
-    targets_mask = np.asarray(targets_mask, dtype=bool)
+    targets_mask = np.asarray(targets_mask)
+    if targets_mask.dtype != bool:
+        ids = np.unique(targets_mask.astype(np.int64))
+        mask = np.zeros(g.n, dtype=bool)
+        mask[ids] = True
+        return ids, mask
     return np.nonzero(targets_mask)[0], targets_mask
 
 
@@ -87,7 +96,7 @@ def _evaluate_specs(g, specs, models, engine, targets_mask):
     active, mask = _active_and_mask(g, targets_mask)
     out = {}
     for spec in specs:
-        demand = _normalize_rows(make_pattern(spec).demand(g, mask))
+        demand = normalize_demand(make_pattern(spec).demand(g, mask))
         out[spec] = evaluate_models(g, demand, active, models, engine)
     return out
 

@@ -70,6 +70,7 @@ __all__ = [
     "TrafficPattern", "PATTERNS", "register_pattern", "make_pattern",
     "matrix_pattern", "SaturationReport", "saturation_report",
     "saturation_sweep", "DEFAULT_SWEEP", "COLLECTIVE_OPS",
+    "normalize_demand",
 ]
 
 
@@ -326,11 +327,17 @@ class SaturationReport:
     alpha: float | None = None  # blend weight on minimal (ugal models)
 
 
-def _normalize_rows(demand: np.ndarray) -> np.ndarray:
+def normalize_demand(demand: np.ndarray) -> np.ndarray:
+    """Scale a demand matrix so the busiest source injects one unit —
+    the normalization behind every theta in this module (and the one
+    fabric.placement's byte matrices go through)."""
     peak = demand.sum(axis=1).max()
     if peak <= 0:
         raise ValueError("demand matrix is all zero")
     return demand / peak
+
+
+_normalize_rows = normalize_demand  # pre-PR 4 private name
 
 
 def saturation_report(g: Graph, pattern, routing: str = "minimal",
@@ -347,7 +354,7 @@ def saturation_report(g: Graph, pattern, routing: str = "minimal",
     pat = make_pattern(pattern)
     if targets_mask is None:
         targets_mask = g.meta.get("leaf_mask")
-    demand = _normalize_rows(pat.demand(g, targets_mask))
+    demand = normalize_demand(pat.demand(g, targets_mask))
     total = float(demand.sum())
     active = (np.arange(g.n) if targets_mask is None
               else np.nonzero(np.asarray(targets_mask, dtype=bool))[0])

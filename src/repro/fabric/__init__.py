@@ -1,4 +1,12 @@
 from .collectives import (CollectiveCost, allgather_time, allreduce_time,
-                          alltoall_time, collective_time, reducescatter_time)
+                          alltoall_time, bytes_on_wire, collective_time,
+                          reducescatter_time)
 from .model import FabricModel, make_fabric, torus3d_graph
-from .planner import FabricCandidate, StepProfile, candidate_fabrics, plan
+from .placement import (PLACEMENT_STRATEGIES, Placement, PlacementStrategy,
+                        collective_traffic, evaluate_placements,
+                        greedy_improve, link_loads, make_placement_strategy,
+                        place_mesh, placement_demand, placement_report,
+                        placement_search, register_placement,
+                        schedule_from_profile)
+from .planner import (FabricCandidate, StepProfile, candidate_fabrics,
+                      fragmentation_sweep, placement_step_seconds, plan)

@@ -29,9 +29,33 @@ from dataclasses import dataclass
 from .model import FabricModel
 
 __all__ = ["CollectiveCost", "collective_time", "allreduce_time",
-           "allgather_time", "alltoall_time", "reducescatter_time"]
+           "allgather_time", "alltoall_time", "reducescatter_time",
+           "bytes_on_wire", "RING_OPS", "SPREAD_OPS"]
 
 PER_HOP_LATENCY_S = 0.5e-6
+
+# Collectives whose schedule serializes over ring neighbours vs. spreading
+# uniformly over the group (MoE dispatch / personalized exchange).
+RING_OPS = ("all-reduce", "all-gather", "reduce-scatter")
+SPREAD_OPS = ("all-to-all", "collective-permute")
+
+# Bytes each rank puts on the wire per unit payload, relative to the
+# (n-1)/n baseline every timer below prices: all-reduce is rs + ag.
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def bytes_on_wire(op: str, bytes_amount: float, n: int) -> float:
+    """Bytes ONE rank sends for one ``op`` on an ``n``-rank group — the
+    single source of truth for the (n-1)/n byte accounting the timers
+    below price and the placement demand pipeline aggregates
+    (fabric.placement.placement_demand)."""
+    if op not in _WIRE_FACTOR:
+        raise ValueError(f"unknown collective {op!r}; "
+                         f"options: {RING_OPS + SPREAD_OPS}")
+    if n <= 1:
+        return 0.0
+    return _WIRE_FACTOR[op] * bytes_amount * (n - 1) / n
 
 
 @dataclass
@@ -62,7 +86,7 @@ def allgather_time(fabric: FabricModel, bytes_global: float, n: int,
                    pattern=None, routing: str = "minimal") -> CollectiveCost:
     """Each node ends with bytes_global; sends its 1/n shard to n-1 peers
     (uniform destinations)."""
-    sent = bytes_global * (n - 1) / n
+    sent = bytes_on_wire("all-gather", bytes_global, n)
     return CollectiveCost("all-gather", bytes_global / n,
                           sent / _node_bw(fabric, pattern, routing),
                           _hops(fabric, pattern, routing) * PER_HOP_LATENCY_S)
@@ -70,7 +94,7 @@ def allgather_time(fabric: FabricModel, bytes_global: float, n: int,
 
 def reducescatter_time(fabric: FabricModel, bytes_global: float, n: int,
                        pattern=None, routing: str = "minimal") -> CollectiveCost:
-    sent = bytes_global * (n - 1) / n
+    sent = bytes_on_wire("reduce-scatter", bytes_global, n)
     return CollectiveCost("reduce-scatter", bytes_global / n,
                           sent / _node_bw(fabric, pattern, routing),
                           _hops(fabric, pattern, routing) * PER_HOP_LATENCY_S)
@@ -88,7 +112,7 @@ def allreduce_time(fabric: FabricModel, bytes_global: float, n: int,
 def alltoall_time(fabric: FabricModel, bytes_per_node: float, n: int,
                   pattern=None, routing: str = "minimal") -> CollectiveCost:
     """Personalized all-to-all: the exact uniform-traffic pattern."""
-    sent = bytes_per_node * (n - 1) / n
+    sent = bytes_on_wire("all-to-all", bytes_per_node, n)
     return CollectiveCost("all-to-all", bytes_per_node,
                           sent / _node_bw(fabric, pattern, routing),
                           _hops(fabric, pattern, routing) * PER_HOP_LATENCY_S)

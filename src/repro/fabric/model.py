@@ -149,6 +149,28 @@ class FabricModel:
         rep = self.pattern_report(pattern, routing)
         return rep.theta * self.link_bytes_per_s / self.terminals_per_router
 
+    def place(self, mesh_shape, axis_names, strategy="group", seed: int = 0,
+              schedule=None, routing="minimal"):
+        """Place a (pod, data, model)-shaped chip mesh on this fabric via
+        a registered placement strategy (fabric.placement)."""
+        from .placement import place_mesh
+        return place_mesh(self.graph, mesh_shape, axis_names,
+                          int(self.terminals_per_router), strategy,
+                          seed=seed, schedule=schedule, routing=routing)
+
+    def placement_report(self, profile, placement, routing: str = "ugal",
+                         engine: str | None = None):
+        """Saturation analysis of one (StepProfile, Placement) pair under
+        a routing model: theta of the placement's router-level demand
+        matrix in Eq. 1's link-equivalent units (fabric.placement)."""
+        from .placement import placement_report
+        if self.graph.n > self.PATTERN_MAX_N:
+            raise ValueError(
+                f"placement saturation needs dense (N, N) demand matrices; "
+                f"N={self.graph.n} > {self.PATTERN_MAX_N}.")
+        return placement_report(placement, profile, routing=routing,
+                                engine=engine)
+
     def pattern_kbar(self, pattern, routing: str = "minimal") -> float:
         """Demand-weighted mean hop count under the pattern (2 phases under
         Valiant); prices the latency term of small-message collectives.

@@ -1,35 +1,60 @@
-"""Placement: map logical mesh coordinates (pod, data, model) onto the
-terminals of a physical fabric graph and evaluate per-link load for a
-step's collective schedule.
+"""Placement-aware demand pipeline: map logical mesh coordinates
+(pod, data, model) onto the terminals of a physical fabric graph and
+score the resulting traffic through the routing registry.
 
 This closes the loop the paper leaves open: Section 2 prices UNIFORM
 traffic with the closed form u = a·k̄/Δ; a training step's traffic is
-structured (rings over the DP axis, all-to-all inside TP/EP groups), so the
-load actually seen by each link depends on where the job's chips sit.  We
-route the schedule over shortest paths (equal split, the paper's minimal-
-routing model) and report max/mean link load — the placement analogue of
-Theorem 3.9's counting argument.
+structured (rings over the DP axis, all-to-all inside TP/EP groups), so
+the load actually seen by each link depends on where the job's chips sit.
+A ``(StepProfile, Placement)`` pair compiles into a router-level (N, N)
+demand matrix (:func:`placement_demand`, reusing fabric.collectives' byte
+accounting), which flows through ``arc_loads_weighted`` /
+``saturation_report`` under ANY registered routing model — minimal,
+Valiant, or the UGAL blend a real large-radix router runs.  theta of that
+matrix (demand normalized so the busiest router injects one unit) is the
+placement analogue of Theorem 3.9's counting argument, comparable across
+fabrics in Eq. 1's link-equivalent units.
 
-Strategies:
-  linear  — chips fill routers in index order (what a naive scheduler does)
-  group   — each model-axis group is packed onto consecutive routers
-            (electrical-group-aligned; for PN fabrics this is the subplane
-            partition of Figure 2)
-  random  — seeded shuffle baseline
-plus ``greedy_improve``: pairwise-swap descent on max-link load.
+Placement strategies are a registry (:data:`PLACEMENT_STRATEGIES`,
+mirroring the traffic-pattern and routing registries):
+
+  linear       chips fill routers in index order (a naive scheduler)
+  group        each model-axis group is packed onto consecutive routers
+               (electrical-group-aligned; for PN fabrics the subplane
+               partition of Figure 2)
+  random       seeded shuffle baseline
+  orbit        group packing onto an automorphism-orbit-sorted router
+               order (leaf columns first on indirect networks): a single
+               model group spanning a whole orbit one-chip-per-router
+               produces uniform-shaped demand on an automorphism-
+               invariant active set, so ``arc_loads_weighted`` routes it
+               through PR 1's orbit shortcut
+  greedy_swap  pairwise-swap descent on max arc load under the scoring
+               routing model, seeded from another strategy
+
+``evaluate_placements`` / ``placement_search`` score strategies by theta
+under a chosen routing model (default ugal — the routing the fabric
+actually runs) and optionally by the worst case over
+``repro.core.adversary`` restricted to the routers the job occupies.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
 from ..core import Graph
-from ..core.graph import bfs_distances_batched
+from ..core.routing import make_routing, parse_spec
+from .collectives import RING_OPS, SPREAD_OPS, bytes_on_wire
 
-__all__ = ["Placement", "place_mesh", "collective_traffic", "link_loads",
-           "greedy_improve", "evaluate_placements"]
+__all__ = ["Placement", "PlacementStrategy", "PLACEMENT_STRATEGIES",
+           "register_placement", "make_placement_strategy", "place_mesh",
+           "collective_traffic", "schedule_from_profile", "placement_demand",
+           "placement_report", "link_loads", "greedy_improve",
+           "evaluate_placements", "placement_search", "DEFAULT_STRATEGIES",
+           "AXIS_OF_OP"]
 
 
 @dataclass
@@ -44,31 +69,64 @@ class Placement:
     def n_chips(self) -> int:
         return int(np.prod(self.mesh_shape))
 
+    @property
+    def occupied(self) -> np.ndarray:
+        """Sorted router ids hosting at least one chip."""
+        return np.unique(self.router_of)
 
-def place_mesh(g: Graph, mesh_shape, axis_names, terminals_per_router: int,
-               strategy: str = "linear", seed: int = 0) -> Placement:
-    n_chips = int(np.prod(mesh_shape))
-    capacity = g.n * terminals_per_router
-    if n_chips > capacity:
-        raise ValueError(f"{n_chips} chips > {capacity} terminals "
-                         f"({g.n} routers x {terminals_per_router})")
-    slots = np.repeat(np.arange(g.n), terminals_per_router)[:n_chips]
-    if strategy == "linear":
-        router_of = slots
-    elif strategy == "random":
-        rng = np.random.default_rng(seed)
-        router_of = rng.permutation(
-            np.repeat(np.arange(g.n), terminals_per_router))[:n_chips]
-    elif strategy == "group":
-        # pack each model-axis group contiguously: chips that talk the most
-        # (TP/EP collectives) share a router/electrical group
-        idx = np.arange(n_chips).reshape(mesh_shape)
-        order = np.moveaxis(idx, axis_names.index("model"), -1).reshape(-1)
-        router_of = np.empty(n_chips, dtype=np.int64)
-        router_of[order] = slots
-    else:
-        raise ValueError(strategy)
-    return Placement(g, tuple(mesh_shape), tuple(axis_names), router_of)
+
+# ---------------------------------------------------------------------------
+# Schedule -> chip traffic -> router demand
+# ---------------------------------------------------------------------------
+
+# Which mesh axis each collective kind of a StepProfile rides: gradient
+# rings run over the data-parallel axis, MoE dispatch / personalized
+# exchange inside the model (TP/EP) groups.
+AXIS_OF_OP = {"all-reduce": "data", "all-gather": "data",
+              "reduce-scatter": "data",
+              "all-to-all": "model", "collective-permute": "model"}
+
+
+def schedule_from_profile(profile, axis_names, axis_of=None) -> dict:
+    """Map a StepProfile's per-device collective bytes onto mesh axes.
+
+    Returns ``{axis: (kind, payload)}`` for :func:`collective_traffic`,
+    with kind ``'ring'`` (DP gradient schedule) or ``'all_to_all'``
+    (TP/EP group exchange).  Byte accounting delegates to
+    fabric.collectives: the ring kind prices the all-reduce wire bytes
+    2(n-1)/n · payload, so an all-gather / reduce-scatter (half the wire
+    bytes) folds in as payload/2.  Ops with zero bytes are dropped; an op
+    whose axis is missing from ``axis_names`` raises."""
+    axis_of = dict(AXIS_OF_OP, **(axis_of or {}))
+    by_kind = getattr(profile, "bytes_by_kind", profile)
+    ring = {}
+    a2a = {}
+    for op, b in by_kind.items():
+        if op not in axis_of:
+            raise ValueError(f"unknown collective kind {op!r}; "
+                             f"options: {sorted(AXIS_OF_OP)}")
+        if b == 0:
+            continue
+        axis = axis_of[op]
+        if axis not in axis_names:
+            raise ValueError(f"profile has {op} bytes but the mesh has no "
+                             f"{axis!r} axis (axes: {axis_names})")
+        if op in RING_OPS:
+            # ring kind = all-reduce accounting (2(n-1)/n); scale other
+            # ring ops by their wire-byte ratio (n-independent)
+            ring[axis] = ring.get(axis, 0.0) + b * (
+                bytes_on_wire(op, 1.0, 2) / bytes_on_wire("all-reduce", 1.0, 2))
+        elif op in SPREAD_OPS:
+            a2a[axis] = a2a.get(axis, 0.0) + b
+    out = {}
+    for axis, payload in ring.items():
+        out[axis] = ("ring", payload)
+    for axis, payload in a2a.items():
+        if axis in out:
+            raise ValueError(f"axis {axis!r} carries both ring and "
+                             f"all-to-all traffic; remap with axis_of")
+        out[axis] = ("all_to_all", payload)
+    return out
 
 
 def collective_traffic(mesh_shape, axis_names, bytes_by_axis: dict):
@@ -76,9 +134,10 @@ def collective_traffic(mesh_shape, axis_names, bytes_by_axis: dict):
 
     bytes_by_axis: {axis: (kind, bytes_global)} with kind in
     {'ring', 'all_to_all'}; 'ring' models all-reduce/all-gather/reduce-
-    scatter (2(n-1)/n of the payload between ring neighbours), 'all_to_all'
-    models MoE dispatch (payload/n between every ordered pair in the group).
-    Returns (src_chip, dst_chip, bytes) arrays.
+    scatter (2(n-1)/n of the payload between ring neighbours, the
+    all-reduce wire accounting of fabric.collectives), 'all_to_all'
+    models MoE dispatch (payload/n between every ordered pair in the
+    group).  Returns (src_chip, dst_chip, bytes) arrays.
     """
     n_chips = int(np.prod(mesh_shape))
     coords = np.stack(np.unravel_index(np.arange(n_chips), mesh_shape), 1)
@@ -92,7 +151,7 @@ def collective_traffic(mesh_shape, axis_names, bytes_by_axis: dict):
         if kind == "ring":
             nxt[:, ax] = (nxt[:, ax] + 1) % n
             dst = np.ravel_multi_index(nxt.T, mesh_shape)
-            per = payload * 2.0 * (n - 1) / n
+            per = bytes_on_wire("all-reduce", payload, n)
             srcs.append(np.arange(n_chips)); dsts.append(dst)
             byts.append(np.full(n_chips, per))
         elif kind == "all_to_all":
@@ -104,78 +163,424 @@ def collective_traffic(mesh_shape, axis_names, bytes_by_axis: dict):
                 byts.append(np.full(n_chips, payload / n))
         else:
             raise ValueError(kind)
+    if not srcs:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z.copy(), np.zeros(0)
     return (np.concatenate(srcs), np.concatenate(dsts), np.concatenate(byts))
 
 
-def link_loads(p: Placement, traffic) -> dict:
-    """Route traffic over shortest paths (equal split over next hops, the
-    minimal-routing model of Section 2) and accumulate per-arc load."""
-    g = p.graph
+def _router_demand(p: Placement, traffic) -> np.ndarray:
+    """Aggregate chip-to-chip traffic to a router-level (N, N) demand
+    matrix; same-router bytes land on the diagonal and are zeroed (local
+    to the router's terminals, never on the fabric)."""
     src, dst, byts = traffic
-    rs, rd = p.router_of[src], p.router_of[dst]
-    # aggregate router-to-router demands
-    key = rs * g.n + rd
-    agg = np.zeros(g.n * g.n)
-    np.add.at(agg, key, byts)
-    dist = bfs_distances_batched(g, np.arange(g.n)).astype(np.int64)
-    arc_load = np.zeros(len(g.indices))
-    for s in range(g.n):
-        demand = agg[s * g.n: (s + 1) * g.n].copy()
-        demand[s] = 0.0
-        if not demand.any():
-            continue
-        # push flow from s along the shortest-path DAG with equal next-hop
-        # (ECMP-style) split: process nodes far-to-near; down[v] = bytes
-        # that must transit v (own demand + downstream shares)
-        order = np.argsort(dist[s])
-        down = demand.copy()
-        for v in order[::-1]:
-            if v == s or down[v] <= 0:
-                continue
-            lo, hi = g.indptr[v], g.indptr[v + 1]
-            nbrs = g.indices[lo:hi]
-            preds = lo + np.nonzero(dist[s][nbrs] == dist[s][v] - 1)[0]
-            if len(preds) == 0:
-                continue
-            share = down[v] / len(preds)
-            for a in preds:
-                u = g.indices[a]
-                # arc u->v carries `share`; find arc id (u, v)
-                lo_u, hi_u = g.indptr[u], g.indptr[u + 1]
-                arc = lo_u + int(np.nonzero(g.indices[lo_u:hi_u] == v)[0][0])
-                arc_load[arc] += share
-                down[u] += share
-    return {"loads": arc_load, "max": float(arc_load.max(initial=0.0)),
-            "mean": float(arc_load.mean() if len(arc_load) else 0.0)}
+    d = np.zeros((p.graph.n, p.graph.n))
+    np.add.at(d, (p.router_of[src], p.router_of[dst]), byts)
+    np.fill_diagonal(d, 0.0)
+    return d
 
 
-def greedy_improve(p: Placement, traffic, iters: int = 200,
-                   seed: int = 0) -> tuple[Placement, float]:
-    """Pairwise-swap descent on max link load."""
-    rng = np.random.default_rng(seed)
-    best = p.router_of.copy()
-    best_load = link_loads(p, traffic)["max"]
-    cur = Placement(p.graph, p.mesh_shape, p.axis_names, best)
-    for _ in range(iters):
-        i, j = rng.integers(0, p.n_chips, 2)
-        if cur.router_of[i] == cur.router_of[j]:
+def placement_demand(profile, placement: Placement, axis_of=None) -> np.ndarray:
+    """Compile (StepProfile, Placement) into the router-level (N, N)
+    demand matrix of one training step — the object the whole routing
+    stack consumes.
+
+    ``profile`` is a fabric.planner.StepProfile (or anything with
+    ``bytes_by_kind``), or directly a ``{axis: (kind, bytes)}`` schedule
+    as taken by :func:`collective_traffic`.  The matrix is in BYTES per
+    step; ``saturation_report(g, placement_demand(...), routing=...)``
+    normalizes it (busiest router injects one unit) and reports theta in
+    Eq. 1's link-equivalent units."""
+    schedule = (profile if isinstance(profile, dict)
+                else schedule_from_profile(profile, placement.axis_names,
+                                           axis_of))
+    traffic = collective_traffic(placement.mesh_shape, placement.axis_names,
+                                 schedule)
+    return _router_demand(placement, traffic)
+
+
+def chip_wire_bytes(profile, mesh_shape, axis_names, axis_of=None) -> float:
+    """Bytes ONE chip puts on the wire per step under the schedule —
+    identical for every chip and independent of placement, which makes it
+    the right normalizer for placement theta (below)."""
+    schedule = (profile if isinstance(profile, dict)
+                else schedule_from_profile(profile, tuple(axis_names),
+                                           axis_of))
+    total = 0.0
+    for axis, (kind, payload) in schedule.items():
+        n = mesh_shape[axis_names.index(axis)]
+        op = "all-reduce" if kind == "ring" else "all-to-all"
+        total += bytes_on_wire(op, payload, n)
+    return total
+
+
+def placement_report(placement: Placement, profile, routing="ugal",
+                     engine: str | None = None, axis_of=None):
+    """Saturation analysis of one (profile, placement) pair under one
+    routing model, as a repro.core.traffic ``SaturationReport``.
+
+    The demand is normalized so the busiest CHIP injects one unit
+    (:func:`chip_wire_bytes` — a placement-invariant constant), NOT the
+    busiest router: theta = 1/max_load is then the fraction of one
+    link's bandwidth every chip can sustainably inject, comparable
+    across strategies AND fabrics in Eq. 1's link-equivalent units.
+    (Row normalization would rescale each layout by its own peak router
+    and erase exactly the locality differences placement search is
+    after.)  Raises ValueError when every byte stays router-local (the
+    fabric is idle — theta is unbounded)."""
+    from ..core.traffic import SaturationReport
+    g = placement.graph
+    demand = placement_demand(profile, placement, axis_of)
+    per_chip = chip_wire_bytes(profile, placement.mesh_shape,
+                               placement.axis_names, axis_of)
+    if per_chip == 0.0 or not demand.any():
+        raise ValueError("placement demand is all router-local "
+                         "(theta unbounded); nothing to route")
+    norm = demand / per_chip
+    model = make_routing(routing)
+    res = model.evaluate(g, norm, np.arange(g.n), engine)
+    mx = float(res.loads.max())
+    mean = float(res.loads.mean())
+    return SaturationReport(
+        pattern=f"placement({'x'.join(map(str, placement.mesh_shape))})",
+        routing=model.name, theta=1.0 / mx, u=mean / mx, max_load=mx,
+        mean_load=mean, kbar_eff=res.kbar_eff, diameter=int(res.diameter),
+        total_demand=float(norm.sum()), loads=res.loads, alpha=res.alpha)
+
+
+def link_loads(p: Placement, traffic, routing="minimal",
+               engine: str | None = None) -> dict:
+    """Per-arc load of chip-to-chip traffic under a registered routing
+    model — a thin parity shim over the weighted engines: the traffic is
+    aggregated to a router demand matrix (:func:`_router_demand`) and
+    routed by repro.core.routing.  Under ``"minimal"`` this is the
+    equal-split shortest-path accounting the pre-registry implementation
+    computed with its own per-source BFS (bit-compatible on the paper's
+    diameter-2 fabrics; see tests/test_placement_pipeline.py for the
+    parity pin and the ECMP-vs-path-split note on higher-diameter
+    graphs)."""
+    g = p.graph
+    demand = _router_demand(p, traffic)
+    if not demand.any():  # every byte stays router-local
+        zeros = np.zeros(len(g.indices))
+        return {"loads": zeros, "max": 0.0, "mean": 0.0, "kbar_eff": 0.0}
+    res = make_routing(routing).evaluate(g, demand, np.arange(g.n), engine)
+    return {"loads": res.loads, "max": float(res.loads.max()),
+            "mean": float(res.loads.mean()), "kbar_eff": res.kbar_eff}
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlacementStrategy:
+    """A named chip->router assignment recipe.
+
+    ``assign(g, mesh_shape, axis_names, delta0, seed=..., schedule=...,
+    routing=..., engine=...)`` returns the (n_chips,) router index array;
+    strategies that don't score traffic ignore the trailing keywords."""
+
+    name: str
+    assign: Callable[..., np.ndarray] = field(repr=False)
+    description: str = ""
+
+
+PLACEMENT_STRATEGIES: dict[str, Callable[..., PlacementStrategy]] = {}
+
+
+def register_placement(name: str):
+    """Register a strategy factory: ``fn(*args) -> PlacementStrategy``."""
+
+    def deco(fn):
+        PLACEMENT_STRATEGIES[name] = fn
+        return fn
+
+    return deco
+
+
+def make_placement_strategy(spec) -> PlacementStrategy:
+    """Build a strategy from a registry name with optional arguments
+    (``"group"``, ``"greedy_swap(120)"``); passes PlacementStrategy
+    instances through."""
+    if isinstance(spec, PlacementStrategy):
+        return spec
+    return parse_spec(spec, PLACEMENT_STRATEGIES, "placement strategy")
+
+
+def _model_axis(axis_names) -> int:
+    """The axis whose groups exchange all-to-all; falls back to the last
+    axis for meshes without a named model axis."""
+    return (axis_names.index("model") if "model" in axis_names
+            else len(axis_names) - 1)
+
+
+def _model_major_order(mesh_shape, axis_names) -> np.ndarray:
+    """Chip ids reordered so each model-axis group is contiguous."""
+    idx = np.arange(int(np.prod(mesh_shape))).reshape(mesh_shape)
+    return np.moveaxis(idx, _model_axis(axis_names), -1).reshape(-1)
+
+
+def _assign_slots(slots: np.ndarray,
+                  chip_order: np.ndarray | None = None) -> np.ndarray:
+    """Deal an explicit router-slot sequence to chips (in chip_order,
+    default chip-major)."""
+    slots = np.asarray(slots, dtype=np.int64)
+    if chip_order is None:
+        return slots
+    router_of = np.empty(len(slots), dtype=np.int64)
+    router_of[chip_order] = slots
+    return router_of
+
+
+def _fill(router_order: np.ndarray, n_chips: int, delta0: int,
+          chip_order: np.ndarray | None = None) -> np.ndarray:
+    """Deal delta0 slots per router (in router_order) to chips (in
+    chip_order, default chip-major)."""
+    return _assign_slots(np.repeat(router_order, delta0)[:n_chips],
+                         chip_order)
+
+
+@register_placement("linear")
+def _linear() -> PlacementStrategy:
+    def assign(g, mesh_shape, axis_names, delta0, **kw):
+        return _fill(np.arange(g.n), int(np.prod(mesh_shape)), delta0)
+
+    return PlacementStrategy("linear", assign,
+                             "chips fill routers in index order")
+
+
+@register_placement("group")
+def _group() -> PlacementStrategy:
+    # pack each model-axis group contiguously: chips that talk the most
+    # (TP/EP collectives) share a router/electrical group
+    def assign(g, mesh_shape, axis_names, delta0, **kw):
+        return _fill(np.arange(g.n), int(np.prod(mesh_shape)), delta0,
+                     _model_major_order(mesh_shape, axis_names))
+
+    return PlacementStrategy("group", assign,
+                             "model-axis groups packed onto consecutive routers")
+
+
+@register_placement("random")
+def _random() -> PlacementStrategy:
+    def assign(g, mesh_shape, axis_names, delta0, seed=0, **kw):
+        rng = np.random.default_rng(seed)
+        return rng.permutation(
+            np.repeat(np.arange(g.n), delta0))[:int(np.prod(mesh_shape))]
+
+    return PlacementStrategy("random", assign, "seeded shuffle baseline")
+
+
+def _orbit_router_order(g: Graph) -> np.ndarray:
+    """Routers sorted leaf-columns-first, then by automorphism vertex
+    orbit, then by index; graphs without known generators keep index
+    order (the strategy degenerates to group)."""
+    from ..core.orbits import orbit_info
+    info = orbit_info(g)
+    orbit = (info.vertex_orbit if info is not None
+             else np.zeros(g.n, dtype=np.int64))
+    leaf = g.meta.get("leaf_mask")
+    spine_first = (np.zeros(g.n, dtype=np.int64) if leaf is None
+                   else (~np.asarray(leaf, dtype=bool)).astype(np.int64))
+    return np.lexsort((np.arange(g.n), orbit, spine_first))
+
+
+@register_placement("orbit")
+def _orbit() -> PlacementStrategy:
+    def assign(g, mesh_shape, axis_names, delta0, **kw):
+        return _fill(_orbit_router_order(g), int(np.prod(mesh_shape)),
+                     delta0, _model_major_order(mesh_shape, axis_names))
+
+    return PlacementStrategy(
+        "orbit", assign,
+        "group packing onto an automorphism-orbit-sorted router order "
+        "(leaf columns first); orbit-spanning groups hit the orbit shortcut")
+
+
+def _swap_descent(p: Placement, demand_of, iters: int, seed: int,
+                  routing, engine) -> tuple[Placement, float, list[float]]:
+    """Pairwise-swap descent on max arc load.  Deterministic for a given
+    seed (the candidate swap sequence is drawn up front) and monotone:
+    a swap is kept only when it strictly lowers the objective."""
+    model = make_routing(routing)
+    g = p.graph
+    active = np.arange(g.n)
+
+    def objective(router_of) -> float:
+        d = demand_of(router_of)
+        if not d.any():
+            return 0.0
+        return float(model.evaluate(g, d, active, engine).loads.max())
+
+    cur = p.router_of.copy()
+    best = objective(cur)
+    history = [best]
+    pairs = np.random.default_rng(seed).integers(0, p.n_chips, (iters, 2))
+    for i, j in pairs:
+        if cur[i] == cur[j] or best == 0.0:
+            history.append(best)
             continue
-        cand = cur.router_of.copy()
+        cand = cur.copy()
         cand[i], cand[j] = cand[j], cand[i]
-        trial = Placement(p.graph, p.mesh_shape, p.axis_names, cand)
-        m = link_loads(trial, traffic)["max"]
-        if m < best_load:
-            best_load, cur = m, trial
-    return cur, best_load
+        m = objective(cand)
+        if m < best:
+            best, cur = m, cand
+        history.append(best)
+    return (Placement(g, p.mesh_shape, p.axis_names, cur), best, history)
+
+
+@register_placement("greedy_swap")
+def _greedy_swap(iters: int = 200, start: str = "group") -> PlacementStrategy:
+    def assign(g, mesh_shape, axis_names, delta0, seed=0, schedule=None,
+               routing="minimal", engine=None, **kw):
+        if schedule is None:
+            raise ValueError("greedy_swap needs the schedule it descends "
+                             "on; pass schedule= to place_mesh")
+        base = make_placement_strategy(start).assign(
+            g, mesh_shape, axis_names, delta0, seed=seed, schedule=schedule,
+            routing=routing, engine=engine)
+        p0 = Placement(g, tuple(mesh_shape), tuple(axis_names), base)
+        traffic = collective_traffic(mesh_shape, axis_names, schedule)
+        src, dst, byts = traffic
+
+        def demand_of(router_of):
+            d = np.zeros((g.n, g.n))
+            np.add.at(d, (router_of[src], router_of[dst]), byts)
+            np.fill_diagonal(d, 0.0)
+            return d
+
+        p, _, _ = _swap_descent(p0, demand_of, iters, seed, routing, engine)
+        return p.router_of
+
+    return PlacementStrategy(f"greedy_swap({iters},{start})", assign,
+                             "pairwise-swap descent on max arc load")
+
+
+def place_mesh(g: Graph, mesh_shape, axis_names, terminals_per_router: int,
+               strategy="linear", seed: int = 0, schedule=None,
+               routing="minimal", engine: str | None = None) -> Placement:
+    """Assign a (pod, data, model)-shaped chip mesh to routers via a
+    registered strategy.  ``schedule``/``routing``/``engine`` feed the
+    traffic-scoring strategies (greedy_swap); the geometric strategies
+    ignore them."""
+    n_chips = int(np.prod(mesh_shape))
+    capacity = g.n * terminals_per_router
+    if n_chips > capacity:
+        raise ValueError(f"{n_chips} chips > {capacity} terminals "
+                         f"({g.n} routers x {terminals_per_router})")
+    strat = make_placement_strategy(strategy)
+    router_of = np.asarray(
+        strat.assign(g, tuple(mesh_shape), tuple(axis_names),
+                     terminals_per_router, seed=seed, schedule=schedule,
+                     routing=routing, engine=engine), dtype=np.int64)
+    if (np.bincount(router_of, minlength=g.n) > terminals_per_router).any():
+        raise ValueError(f"strategy {strat.name!r} oversubscribed a router "
+                         f"beyond {terminals_per_router} terminals")
+    return Placement(g, tuple(mesh_shape), tuple(axis_names), router_of)
+
+
+# ---------------------------------------------------------------------------
+# Search and comparison
+# ---------------------------------------------------------------------------
+
+
+def greedy_improve(p: Placement, traffic, iters: int = 200, seed: int = 0,
+                   routing="minimal", engine: str | None = None,
+                   return_history: bool = False):
+    """Pairwise-swap descent on max arc load under ``routing``.
+    Seed-deterministic (the swap sequence is pre-drawn) with a monotone
+    non-increasing objective; ``return_history=True`` also returns the
+    per-iteration best objective."""
+    src, dst, byts = traffic
+    g = p.graph
+
+    def demand_of(router_of):
+        d = np.zeros((g.n, g.n))
+        np.add.at(d, (router_of[src], router_of[dst]), byts)
+        np.fill_diagonal(d, 0.0)
+        return d
+
+    placed, best, history = _swap_descent(p, demand_of, iters, seed,
+                                          routing, engine)
+    if return_history:
+        return placed, best, history
+    return placed, best
+
+
+DEFAULT_STRATEGIES = ("linear", "group", "random", "orbit")
+
+
+def _strategy_row(g, placement, schedule, routing, engine) -> dict:
+    per_chip = chip_wire_bytes(schedule, placement.mesh_shape,
+                               placement.axis_names)
+    try:
+        rep = placement_report(placement, schedule, routing=routing,
+                               engine=engine)
+    except ValueError:  # all traffic router-local: the fabric is idle
+        return {"theta": float("inf"), "u": 1.0, "max_load": 0.0,
+                "kbar_eff": 0.0, "alpha": None, "max_bytes": 0.0,
+                "mean_bytes": 0.0}
+    return {"theta": rep.theta, "u": rep.u, "max_load": rep.max_load,
+            "kbar_eff": rep.kbar_eff, "alpha": rep.alpha,
+            "max_bytes": rep.max_load * per_chip,
+            "mean_bytes": rep.mean_load * per_chip}
 
 
 def evaluate_placements(g: Graph, mesh_shape, axis_names, delta0: int,
-                        bytes_by_axis: dict, seed: int = 0) -> dict:
-    """Compare strategies; returns {strategy: {max, mean}}."""
-    traffic = collective_traffic(mesh_shape, axis_names, bytes_by_axis)
+                        profile, strategies=DEFAULT_STRATEGIES,
+                        routing="ugal", seed: int = 0,
+                        engine: str | None = None) -> dict:
+    """Compare placement strategies on one fabric; returns
+    ``{strategy: {theta, u, max_load, kbar_eff, alpha, max_bytes,
+    mean_bytes}}`` with theta in Eq. 1's link-equivalent units — demand
+    normalized so the busiest CHIP injects one unit (see
+    :func:`placement_report`), comparable across strategies and fabrics,
+    unlike raw max-bytes.  ``max_bytes`` keeps the raw per-step
+    busiest-link bytes for capacity planning."""
+    schedule = (profile if isinstance(profile, dict)
+                else schedule_from_profile(profile, tuple(axis_names)))
     out = {}
-    for strat in ("linear", "group", "random"):
-        p = place_mesh(g, mesh_shape, axis_names, delta0, strat, seed=seed)
-        r = link_loads(p, traffic)
-        out[strat] = {"max": r["max"], "mean": r["mean"]}
+    for spec in strategies:
+        strat = make_placement_strategy(spec)
+        p = place_mesh(g, mesh_shape, axis_names, delta0, strat, seed=seed,
+                       schedule=schedule, routing=routing, engine=engine)
+        out[strat.name] = _strategy_row(g, p, schedule, routing, engine)
     return out
+
+
+def placement_search(g: Graph, mesh_shape, axis_names, delta0: int, profile,
+                     strategies=DEFAULT_STRATEGIES + ("greedy_swap",),
+                     routing="ugal", seed: int = 0,
+                     engine: str | None = None, adversary: bool = False,
+                     n_random: int = 4) -> dict:
+    """Strategy search scored by theta under ``routing`` (default ugal —
+    the routing the fabric actually runs), optionally cross-checked by
+    the worst case repro.core.adversary finds over the routers the job
+    occupies (``adv_theta``: how robust the occupied set is to hostile
+    tenant traffic).  Returns ``{"rows": {strategy: row}, "best": name,
+    "placements": {strategy: Placement}}`` with best = argmax theta
+    (ties broken by adv_theta when searched)."""
+    schedule = (profile if isinstance(profile, dict)
+                else schedule_from_profile(profile, tuple(axis_names)))
+    rows, placements = {}, {}
+    adv_cache: dict[bytes, tuple] = {}  # strategies often share occupied sets
+    for spec in strategies:
+        strat = make_placement_strategy(spec)
+        p = place_mesh(g, mesh_shape, axis_names, delta0, strat, seed=seed,
+                       schedule=schedule, routing=routing, engine=engine)
+        row = _strategy_row(g, p, schedule, routing, engine)
+        if adversary:
+            from ..core.adversary import worst_case
+            key = p.occupied.tobytes()
+            if key not in adv_cache:
+                adv = worst_case(g, routing, n_random=n_random, seed=seed,
+                                 engine=engine, targets_mask=p.occupied)
+                adv_cache[key] = (adv.worst_theta, adv.worst_pattern)
+            row["adv_theta"], row["adv_pattern"] = adv_cache[key]
+        rows[strat.name] = row
+        placements[strat.name] = p
+    best = max(rows, key=lambda k: (rows[k]["theta"],
+                                    rows[k].get("adv_theta", 0.0)))
+    return {"rows": rows, "best": best, "placements": placements}

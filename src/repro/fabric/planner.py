@@ -3,6 +3,15 @@ collective profile (straight from the dry-run JSONs) and a chip budget,
 evaluate candidate fabrics on (a) the paper's $-and-Watts model and (b)
 per-step collective time from the saturation model — the full loop from
 'compiled XLA program' to 'which network should the cluster buy'.
+
+With a mesh shape, the buy loop goes placement-aware: each candidate
+places the job via a registered placement strategy (fabric.placement),
+compiles the (profile, placement) pair into a router-level demand matrix,
+and prices the step off the busiest link under the routing the fabric
+actually runs (default ugal) — the quantity Eq. 1's uniform closed form
+approximates.  ``fragmentation_sweep`` compares multi-tenant layouts
+(packed vs interleaved vs chip-major linear) at pod scale under optional
+background adversary traffic.
 """
 
 from __future__ import annotations
@@ -14,10 +23,14 @@ import numpy as np
 from ..core import (DirectNetworkSpec, cable_split, dollars_per_node,
                     electrical_groups, utilization, watts_per_node)
 from ..core.reference import dragonfly_canonical_stats
-from .collectives import collective_time
+from ..core.routing import make_routing
+from .collectives import PER_HOP_LATENCY_S, collective_time
 from .model import FabricModel, torus3d_graph
+from .placement import (Placement, _assign_slots, _model_major_order,
+                        placement_demand)
 
-__all__ = ["FabricCandidate", "candidate_fabrics", "plan", "StepProfile"]
+__all__ = ["FabricCandidate", "candidate_fabrics", "plan", "StepProfile",
+           "placement_step_seconds", "fragmentation_sweep"]
 
 
 @dataclass
@@ -33,6 +46,26 @@ class StepProfile:
         return cls(bytes_by_kind=coll)
 
 
+def placement_step_seconds(fabric: FabricModel, profile, placement: Placement,
+                           routing="ugal", engine: str | None = None) -> float:
+    """Per-step collective seconds of a PLACED job: the (profile,
+    placement) demand matrix is routed under ``routing`` and the busiest
+    link's bytes serialize the step (per-arc capacity =
+    ``link_bytes_per_s``), plus one demand-weighted hop-latency term per
+    collective phase — the placement-aware replacement for the uniform
+    Eq. 1 pricing of ``FabricCandidate.step_comm_seconds``."""
+    demand = placement_demand(profile, placement)
+    by_kind = getattr(profile, "bytes_by_kind", profile)
+    n_ops = sum(1 for b in by_kind.values()
+                if (b[1] if isinstance(b, tuple) else b))
+    if not demand.any():  # every byte stays router-local
+        return 0.0
+    res = make_routing(routing).evaluate(
+        placement.graph, demand, np.arange(placement.graph.n), engine)
+    return (float(res.loads.max()) / fabric.link_bytes_per_s
+            + n_ops * res.kbar_eff * PER_HOP_LATENCY_S)
+
+
 @dataclass
 class FabricCandidate:
     fabric: FabricModel
@@ -41,7 +74,14 @@ class FabricCandidate:
     dollars_per_node: float
     watts_per_node: float
 
-    def step_comm_seconds(self, profile: StepProfile) -> float:
+    def step_comm_seconds(self, profile: StepProfile, placement=None,
+                          routing="minimal") -> float:
+        """Uniform Eq. 1 pricing by default; with a Placement, the
+        placement-aware busiest-link pricing of
+        :func:`placement_step_seconds` under ``routing``."""
+        if placement is not None:
+            return placement_step_seconds(self.fabric, profile, placement,
+                                          routing=routing)
         n = self.terminals
         return sum(collective_time(self.fabric, kind, b, n).total_s
                    for kind, b in profile.bytes_by_kind.items())
@@ -104,13 +144,29 @@ def candidate_fabrics(min_terminals: int, max_radix: int = 64):
     return out
 
 
-def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64):
+# Beyond this router count a candidate's dense placement demand matrix
+# stops being the right tool (FabricModel.PATTERN_MAX_N analogue for the
+# buy loop); such candidates keep their uniform Eq. 1 pricing.
+PLACEMENT_MAX_N = 2048
+
+
+def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64,
+         mesh_shape=None, axis_names=("model", "data"),
+         placement_strategy="group", routing="ugal", seed: int = 0):
     """Rank fabrics by step-communication time and report $/W; returns list
-    of dict rows sorted by comm time."""
+    of dict rows sorted by comm time.
+
+    With ``mesh_shape``, each candidate that can host the job (and has at
+    most ``PLACEMENT_MAX_N`` routers) is additionally priced
+    placement-aware: the job is placed via ``placement_strategy``, its
+    demand matrix routed under ``routing``, and ``placed_comm_ms`` (the
+    busiest-link step time) drives the ranking — per-step collective time
+    under the congestion the actual schedule causes, not the uniform
+    closed form."""
     rows = []
     for cand in candidate_fabrics(min_terminals, max_radix):
         t = cand.step_comm_seconds(profile)
-        rows.append({
+        row = {
             "fabric": cand.fabric.name,
             "terminals": cand.terminals,
             "radix": cand.radix,
@@ -120,5 +176,114 @@ def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64):
             "step_comm_ms": round(t * 1e3, 3),
             "usd_per_node": round(cand.dollars_per_node, 2),
             "watts_per_node": round(cand.watts_per_node, 2),
-        })
-    return sorted(rows, key=lambda r: r["step_comm_ms"])
+        }
+        if mesh_shape is not None:
+            n_chips = int(np.prod(mesh_shape))
+            g = cand.fabric.graph
+            d0 = int(cand.fabric.terminals_per_router)
+            if g.n <= PLACEMENT_MAX_N and n_chips <= g.n * d0:
+                from .placement import schedule_from_profile
+                schedule = schedule_from_profile(profile, tuple(axis_names))
+                p = cand.fabric.place(mesh_shape, axis_names,
+                                      strategy=placement_strategy, seed=seed,
+                                      schedule=schedule, routing=routing)
+                placed = placement_step_seconds(cand.fabric, profile, p,
+                                                routing=routing)
+                row["placed_comm_ms"] = round(placed * 1e3, 3)
+                row["placement_strategy"] = placement_strategy
+                row["placement_routing"] = routing
+        rows.append(row)
+    # placed (congestion-aware) and uniform step times are differently
+    # modeled quantities: rank placeable candidates first among
+    # themselves, un-placeable ones after (by their uniform figure)
+    return sorted(rows, key=lambda r: (("placed_comm_ms" not in r)
+                                       if mesh_shape is not None else False,
+                                       r.get("placed_comm_ms",
+                                             r["step_comm_ms"])))
+
+
+# ---------------------------------------------------------------------------
+# Fragmentation at pod scale: multi-tenant layout comparison
+# ---------------------------------------------------------------------------
+
+FRAGMENTATION_LAYOUTS = ("packed", "interleaved", "linear")
+
+
+def _layout_slots(g, jobs, delta0: int, layout: str) -> list[np.ndarray]:
+    """Router-slot sequence per job.  ``packed``/``linear`` hand each job
+    a contiguous slab of router slots; ``interleaved`` deals slots
+    round-robin across jobs — the fragmented schedule where tenants split
+    each router's terminals and every model group is forced off-router."""
+    chips = [int(np.prod(mesh)) for mesh, _, _ in jobs]
+    capacity = g.n * delta0
+    if sum(chips) > capacity:
+        raise ValueError(f"{sum(chips)} chips > {capacity} terminals "
+                         f"({g.n} routers x {delta0})")
+    slot_router = np.repeat(np.arange(g.n), delta0)
+    if layout in ("packed", "linear"):
+        cuts = np.cumsum([0] + chips)
+        return [slot_router[cuts[j]:cuts[j + 1]] for j in range(len(jobs))]
+    if layout == "interleaved":
+        j_count = len(jobs)
+        return [slot_router[j::j_count][:chips[j]] for j in range(j_count)]
+    raise ValueError(f"unknown layout {layout!r}; "
+                     f"options: {FRAGMENTATION_LAYOUTS}")
+
+
+def fragmentation_demand(g, jobs, delta0: int, layout: str) -> np.ndarray:
+    """Combined router-level demand of several co-tenant jobs under one
+    layout.  ``jobs`` is an iterable of (mesh_shape, axis_names, profile);
+    ``packed``/``interleaved`` fill each job's slots model-group-major,
+    ``linear`` chip-major (the naive scheduler both placement strategies
+    beat)."""
+    demand = np.zeros((g.n, g.n))
+    for (mesh, axes, prof), slots in zip(jobs,
+                                         _layout_slots(g, jobs, delta0,
+                                                       layout)):
+        order = (None if layout == "linear"
+                 else _model_major_order(mesh, tuple(axes)))
+        p = Placement(g, tuple(mesh), tuple(axes), _assign_slots(slots, order))
+        demand += placement_demand(prof, p)
+    return demand
+
+
+def fragmentation_sweep(g, jobs, delta0: int,
+                        layouts=FRAGMENTATION_LAYOUTS, routing="ugal",
+                        background=None, background_scale: float = 1.0,
+                        engine: str | None = None) -> dict:
+    """Score multi-tenant layouts at pod scale: theta of the combined
+    (jobs + optional background pattern) demand per layout under one
+    routing model.  ``background`` is any traffic-pattern spec (e.g.
+    ``"tornado"`` — a hostile co-tenant), scaled so its busiest source
+    injects ``background_scale``x the jobs' busiest per-chip wire bytes.
+    theta is normalized by the layout-INVARIANT busiest per-chip wire
+    bytes (fabric.placement.chip_wire_bytes), so layouts compare by
+    actual step throughput rather than each being rescaled by its own
+    peak router.  Returns ``{"layouts": {layout: row}, "best": name}``;
+    packed placement keeping TP/EP groups on whole routers dominates the
+    fragmented interleaved schedule wherever group locality matters."""
+    from ..core.traffic import make_pattern
+    from .placement import chip_wire_bytes
+    jobs = list(jobs)
+    per_chip = max(chip_wire_bytes(prof, tuple(mesh), tuple(axes))
+                   for mesh, axes, prof in jobs)
+    if per_chip == 0.0:
+        raise ValueError("no job puts bytes on the wire")
+    bg = None
+    if background is not None:
+        bg = make_pattern(background).demand(g)
+        bg *= background_scale * per_chip / float(bg.sum(axis=1).max())
+    rows = {}
+    model = make_routing(routing)
+    active = np.arange(g.n)
+    for layout in layouts:
+        demand = fragmentation_demand(g, jobs, delta0, layout)
+        if bg is not None:
+            demand = demand + bg
+        res = model.evaluate(g, demand / per_chip, active, engine)
+        mx = float(res.loads.max())
+        rows[layout] = {"theta": 1.0 / mx, "u": float(res.loads.mean()) / mx,
+                        "max_load": mx, "kbar_eff": res.kbar_eff,
+                        "alpha": res.alpha}
+    return {"layouts": rows,
+            "best": max(rows, key=lambda k: rows[k]["theta"])}

@@ -1,0 +1,365 @@
+"""The placement-aware demand pipeline (PR 4): (StepProfile, Placement)
+-> router demand matrix -> routing registry.
+
+Covers the parity satellite (old ECMP link_loads accounting vs the
+weighted engines), placement theta semantics, the strategy registry
+(orbit shortcut, greedy determinism), the fragmentation sweep, and the
+planner wiring.
+"""
+
+import importlib
+
+import numpy as np
+import pytest
+
+from repro.core import build_topology, dragonfly_graph, oft_graph, pn_graph
+from repro.core.graph import bfs_distances_batched
+from repro.core.traffic import saturation_report
+from repro.fabric import (FabricModel, StepProfile, collective_traffic,
+                          evaluate_placements, fragmentation_sweep,
+                          greedy_improve, link_loads, place_mesh,
+                          placement_demand, placement_report,
+                          placement_search, placement_step_seconds,
+                          schedule_from_profile)
+from repro.fabric.model import torus3d_graph
+from repro.fabric.placement import chip_wire_bytes
+
+MESH = (8, 8)
+AXES = ("data", "model")
+TRAFFIC = {"data": ("ring", 1.0), "model": ("all_to_all", 1.0)}
+PROFILE = StepProfile({"all-to-all": 8e9, "all-reduce": 1e9})  # EP-heavy
+
+
+def _ecmp_link_loads(p, traffic):
+    """Inline replica of the pre-PR 4 link_loads: per-source BFS with
+    equal next-hop (ECMP) split, the accounting the shim replaced."""
+    g = p.graph
+    src, dst, byts = traffic
+    rs, rd = p.router_of[src], p.router_of[dst]
+    key = rs * g.n + rd
+    agg = np.zeros(g.n * g.n)
+    np.add.at(agg, key, byts)
+    dist = bfs_distances_batched(g, np.arange(g.n)).astype(np.int64)
+    arc_load = np.zeros(len(g.indices))
+    for s in range(g.n):
+        demand = agg[s * g.n: (s + 1) * g.n].copy()
+        demand[s] = 0.0
+        if not demand.any():
+            continue
+        order = np.argsort(dist[s])
+        down = demand.copy()
+        for v in order[::-1]:
+            if v == s or down[v] <= 0:
+                continue
+            lo, hi = g.indptr[v], g.indptr[v + 1]
+            nbrs = g.indices[lo:hi]
+            preds = lo + np.nonzero(dist[s][nbrs] == dist[s][v] - 1)[0]
+            if len(preds) == 0:
+                continue
+            share = down[v] / len(preds)
+            for a in preds:
+                u = g.indices[a]
+                lo_u, hi_u = g.indptr[u], g.indptr[u + 1]
+                arc = lo_u + int(np.nonzero(g.indices[lo_u:hi_u] == v)[0][0])
+                arc_load[arc] += share
+                down[u] += share
+    return arc_load
+
+
+# ---------------------------------------------------------------------------
+# Satellite: parity of the old byte accounting vs the weighted engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("builder", [
+    lambda: build_topology("demi_pn", 9),   # diameter 2
+    lambda: oft_graph(4),                   # indirect, diameter 2 on leaves
+    lambda: torus3d_graph(4, 4, 4),
+])
+def test_link_loads_parity_with_ecmp_oracle(builder):
+    """On the paper's families (and the torus reference) the ECMP
+    per-hop split coincides with the equal-path split of the weighted
+    engines arc-by-arc: pin (near-)bit-identity under minimal routing."""
+    g = builder()
+    p = place_mesh(g, MESH, AXES, 2, "random", seed=5)
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    old = _ecmp_link_loads(p, traffic)
+    new = link_loads(p, traffic, routing="minimal")["loads"]
+    np.testing.assert_allclose(new, old, rtol=1e-12, atol=1e-12 * old.max())
+
+
+def test_link_loads_ecmp_delta_documented_on_dragonfly():
+    """Dragonfly's unbalanced shortest-path DAGs are where ECMP per-hop
+    split and equal-path split genuinely differ: golden-pin the
+    normalization delta (per-arc ~12% at this seed) while byte-hops —
+    sum(loads) == sum(bytes x dist) — stay identical, so both
+    accountings conserve the same total work."""
+    g = dragonfly_graph(3)
+    p = place_mesh(g, MESH, AXES, 2, "random", seed=5)
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    old = _ecmp_link_loads(p, traffic)
+    new = link_loads(p, traffic, routing="minimal")["loads"]
+    assert old.sum() == pytest.approx(new.sum(), rel=1e-12)
+    rel = np.abs(old - new).max() / old.max()
+    assert 0.05 < rel < 0.2  # the split difference is real but bounded
+
+
+def test_link_loads_routing_registry():
+    """The shim accepts any registered routing model; Valiant's byte-hops
+    exceed minimal's (detour), ugal's max load is <= both."""
+    g = build_topology("demi_pn", 9)
+    p = place_mesh(g, MESH, AXES, 2, "linear")
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    r_min = link_loads(p, traffic, routing="minimal")
+    r_val = link_loads(p, traffic, routing="valiant")
+    r_ugal = link_loads(p, traffic, routing="ugal")
+    assert r_val["loads"].sum() > r_min["loads"].sum()
+    assert r_ugal["max"] <= min(r_min["max"], r_val["max"]) * (1 + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# placement_demand semantics
+# ---------------------------------------------------------------------------
+
+
+def test_placement_demand_uniform_shape_for_spanning_group():
+    """A single model group, one chip per router across the whole fabric,
+    compiles to uniform-shaped demand w * (ones - I) — exactly the shape
+    the orbit shortcut accepts."""
+    g = pn_graph(4)
+    p = place_mesh(g, (1, g.n), ("data", "model"), 1, "linear")
+    d = placement_demand({"model": ("all_to_all", 3.0)}, p)
+    w = 3.0 / g.n
+    expect = w * (np.ones((g.n, g.n)) - np.eye(g.n))
+    np.testing.assert_allclose(d, expect, rtol=1e-12)
+
+
+def test_placement_demand_conserves_off_router_bytes():
+    g = build_topology("demi_pn", 9)
+    p = place_mesh(g, MESH, AXES, 4, "group", seed=1)
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    d = placement_demand(TRAFFIC, p)
+    src, dst, byts = traffic
+    off = p.router_of[src] != p.router_of[dst]
+    assert d.sum() == pytest.approx(byts[off].sum(), rel=1e-12)
+    assert np.diagonal(d).sum() == 0.0
+
+
+def test_schedule_from_profile_byte_accounting():
+    """StepProfile kinds map onto mesh axes with fabric.collectives' wire
+    accounting: an all-gather of b bytes equals an all-reduce of b/2
+    (half the wire bytes), a2a kinds ride the model axis."""
+    sched = schedule_from_profile(
+        StepProfile({"all-reduce": 4.0, "all-gather": 2.0,
+                     "all-to-all": 6.0, "collective-permute": 1.0,
+                     "reduce-scatter": 0.0}),
+        ("data", "model"))
+    assert sched["data"] == ("ring", pytest.approx(5.0))   # 4 + 2/2
+    assert sched["model"] == ("all_to_all", pytest.approx(7.0))
+
+    with pytest.raises(ValueError, match="unknown collective kind"):
+        schedule_from_profile(StepProfile({"broadcast": 1.0}), AXES)
+    with pytest.raises(ValueError, match="no 'model' axis"):
+        schedule_from_profile(StepProfile({"all-to-all": 1.0}),
+                              ("data", "pod"))
+    # zero-byte ops drop out entirely
+    assert schedule_from_profile(StepProfile({"all-to-all": 0.0}),
+                                 ("data",)) == {}
+
+
+def test_placement_theta_scale_invariant():
+    """theta is normalized by per-chip wire bytes, so scaling the payload
+    leaves it unchanged (Eq. 1 semantics, comparable across fabrics)."""
+    g = build_topology("demi_pn", 9)
+    p = place_mesh(g, MESH, AXES, 4, "group")
+    r1 = placement_report(p, StepProfile({"all-to-all": 1e9}),
+                          routing="minimal")
+    r7 = placement_report(p, StepProfile({"all-to-all": 7e9}),
+                          routing="minimal")
+    assert r1.theta == pytest.approx(r7.theta, rel=1e-12)
+    assert chip_wire_bytes({"model": ("all_to_all", 8.0)}, MESH, AXES) \
+        == pytest.approx(8.0 * 7 / 8)
+
+
+def test_placement_report_all_local_raises():
+    g = build_topology("demi_pn", 9)
+    p = place_mesh(g, (1, 8), ("data", "model"), 8, "linear")
+    with pytest.raises(ValueError, match="router-local"):
+        placement_report(p, {"model": ("all_to_all", 1.0)})
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: end-to-end through the registry; search beats linear on pn16
+# ---------------------------------------------------------------------------
+
+
+def test_saturation_report_on_placement_demand_ugal():
+    g = pn_graph(8)
+    p = place_mesh(g, MESH, AXES, 2, "group")
+    rep = saturation_report(g, placement_demand(PROFILE, p), routing="ugal")
+    assert rep.theta > 0
+    assert rep.routing == "ugal"
+    assert rep.alpha is not None
+
+
+def test_search_beats_linear_on_pn16_nonuniform():
+    """The headline claim: under the routing the fabric actually runs
+    (ugal), placement search strictly beats the naive linear baseline's
+    theta on pn16 for an EP-heavy profile (also recorded in
+    BENCH_4.json)."""
+    g = pn_graph(16)
+    out = placement_search(g, (16, 16), ("model", "data"), 8, PROFILE,
+                           strategies=("linear", "group", "random"),
+                           routing="ugal")
+    rows = out["rows"]
+    assert rows[out["best"]]["theta"] > rows["linear"]["theta"]
+
+
+def test_placement_search_adversary_scores_occupied_set():
+    g = build_topology("demi_pn", 9)
+    out = placement_search(g, (4, 8), AXES, 2, {"model": ("all_to_all", 1.0)},
+                           strategies=("linear", "random"),
+                           routing="minimal", adversary=True, n_random=2)
+    for row in out["rows"].values():
+        assert 0 < row["adv_theta"] <= row["theta"] * 10  # sane scale
+        assert isinstance(row["adv_pattern"], str)
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry: orbit + greedy
+# ---------------------------------------------------------------------------
+
+
+def test_orbit_strategy_fills_leaf_columns_first():
+    g = oft_graph(4)  # 63 routers, 42 leaves
+    leaf = g.meta["leaf_mask"]
+    p = place_mesh(g, (4, 8), AXES, 1, "orbit")
+    assert leaf[p.router_of].all()
+    # linear ploughs straight through the spine columns
+    p_lin = place_mesh(g, (4, 8), AXES, 1, "linear")
+    assert not leaf[p_lin.router_of].all()
+
+
+def test_orbit_placement_hits_orbit_shortcut(monkeypatch):
+    """A model group spanning the whole fabric one-chip-per-router
+    produces uniform-shaped demand, so the weighted engines reroute
+    through PR 1's orbit shortcut (the point of the orbit strategy)."""
+    util = importlib.import_module("repro.core.utilization")
+    g = pn_graph(4)
+    hits = []
+    real = util._loads_orbit
+
+    def spy(*a, **kw):
+        hits.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(util, "_loads_orbit", spy)
+    p = place_mesh(g, (1, g.n), ("data", "model"), 1, "orbit")
+    rep = placement_report(p, {"model": ("all_to_all", 1.0)},
+                           routing="minimal", engine="auto")
+    assert hits, "spanning-group placement demand missed the orbit path"
+    assert rep.theta > 0
+
+
+def test_greedy_improve_deterministic_and_monotone():
+    g = build_topology("demi_pn", 9)
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    p0 = place_mesh(g, MESH, AXES, 2, "random", seed=3)
+    base = link_loads(p0, traffic)["max"]
+    p_a, best_a, hist = greedy_improve(p0, traffic, iters=40, seed=4,
+                                       return_history=True)
+    p_b, best_b = greedy_improve(p0, traffic, iters=40, seed=4)
+    # seed-deterministic: identical assignment and objective
+    np.testing.assert_array_equal(p_a.router_of, p_b.router_of)
+    assert best_a == best_b
+    # monotone non-increasing objective, never worse than the start
+    assert hist[0] == pytest.approx(base)
+    assert all(a >= b for a, b in zip(hist, hist[1:]))
+    assert best_a <= base
+
+
+def test_greedy_swap_strategy_needs_schedule():
+    g = build_topology("demi_pn", 9)
+    with pytest.raises(ValueError, match="schedule"):
+        place_mesh(g, MESH, AXES, 2, "greedy_swap")
+    p = place_mesh(g, MESH, AXES, 2, "greedy_swap(20)", schedule=TRAFFIC)
+    lin = place_mesh(g, MESH, AXES, 2, "group")
+    traffic = collective_traffic(MESH, AXES, TRAFFIC)
+    assert link_loads(p, traffic)["max"] <= link_loads(lin, traffic)["max"]
+
+
+def test_place_mesh_rejects_oversubscription():
+    from repro.fabric import PlacementStrategy
+    g = build_topology("demi_pn", 9)
+    bad = PlacementStrategy(
+        "bad", lambda g, mesh, axes, d0, **kw:
+        np.zeros(int(np.prod(mesh)), dtype=np.int64))
+    with pytest.raises(ValueError, match="oversubscribed"):
+        place_mesh(g, MESH, AXES, 2, bad)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fragmentation — packed vs interleaved vs linear
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("builder,mesh,delta0", [
+    (lambda: pn_graph(16), (16, 16), 8),
+    (lambda: dragonfly_graph(3), (8, 8), 4),
+])
+def test_packed_dominates_fragmented_under_tornado_ugal(builder, mesh, delta0):
+    """Two co-tenant EP-heavy jobs, interleaved (router terminals split
+    between tenants, every model group forced off-router) vs packed
+    (groups on whole routers): packed strictly dominates both the
+    fragmented and the chip-major linear layout under tornado background
+    + ugal routing."""
+    g = builder()
+    jobs = [(mesh, ("model", "data"), PROFILE)] * 2
+    out = fragmentation_sweep(g, jobs, delta0, routing="ugal",
+                              background="tornado")
+    rows = out["layouts"]
+    assert out["best"] == "packed"
+    assert rows["packed"]["theta"] > rows["interleaved"]["theta"]
+    assert rows["packed"]["theta"] > rows["linear"]["theta"]
+
+
+# ---------------------------------------------------------------------------
+# Planner wiring
+# ---------------------------------------------------------------------------
+
+
+def test_placement_step_seconds_prices_busiest_link():
+    g = build_topology("demi_pn", 9)
+    fab = FabricModel(g, terminals_per_router=4)
+    p = fab.place(MESH, AXES, strategy="group")
+    t_group = placement_step_seconds(fab, PROFILE, p, routing="minimal")
+    d = placement_demand(PROFILE, p)
+    from repro.core import arc_loads_weighted
+    loads, kbar, _ = arc_loads_weighted(g, d)
+    expect = loads.max() / fab.link_bytes_per_s
+    assert t_group == pytest.approx(expect, rel=1e-6, abs=1e-4)
+    # all-local placement is free on the fabric
+    p_local = fab.place((1, 4), AXES, strategy="linear")
+    assert placement_step_seconds(
+        fab, {"model": ("all_to_all", 1e9)}, p_local) == 0.0
+
+
+def test_fabric_model_placement_report_wiring():
+    g = pn_graph(8)
+    fab = FabricModel(g, terminals_per_router=2)
+    p = fab.place(MESH, AXES)
+    rep = fab.placement_report(PROFILE, p, routing="ugal")
+    assert rep.routing == "ugal"
+    assert rep.theta > 0
+
+
+def test_adversary_accepts_router_id_lists():
+    from repro.core.adversary import worst_case
+    g = pn_graph(4)
+    ids = np.arange(8)
+    mask = np.zeros(g.n, dtype=bool)
+    mask[ids] = True
+    a = worst_case(g, "minimal", n_random=2, targets_mask=ids)
+    b = worst_case(g, "minimal", n_random=2, targets_mask=mask)
+    assert a.worst_pattern == b.worst_pattern
+    assert a.worst_theta == pytest.approx(b.worst_theta, rel=1e-12)
