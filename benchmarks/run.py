@@ -47,12 +47,13 @@ def main(argv=None) -> None:
                     help="write per-entry wall time + max_rel_err as JSON")
     ap.add_argument("--only",
                     choices=["tables", "figures", "traffic", "routing",
-                             "placement", "all"],
+                             "placement", "sim", "all"],
                     default="all",
                     help="restrict to the paper tables, figures, the "
                          "traffic-pattern saturation sweep, the "
-                         "adversarial routing-model table, or the "
-                         "placement strategy/fragmentation table")
+                         "adversarial routing-model table, the "
+                         "placement strategy/fragmentation table, or "
+                         "the simulator parity table (BENCH_5)")
     ap.add_argument("--err-budget", type=float, default=0.25, metavar="E",
                     help="fail (exit 1) when any entry's max_rel_err exceeds "
                          "E instead of only recording it (negative: record "
@@ -93,6 +94,18 @@ def main(argv=None) -> None:
                        err_of=lambda o: o[2])
             records[-1]["rows"] = out[0]
             records[-1]["worst"] = out[1]
+
+    if args.only in ("sim", "all"):
+        from . import sim_bench as sb
+
+        for case_name, case in sb.sim_cases():
+            out = _run(records, f"sim[{case_name}]",
+                       lambda case=case: sb.sim_one(case),
+                       lambda o: (f"theta={o[0]['theta_sim']:.4f}"
+                                  f" analytic={o[0]['theta_analytic']:.4f}"
+                                  f" kind={o[0]['kind']}"),
+                       err_of=lambda o: o[1])
+            records[-1]["row"] = out[0]
 
     if args.only in ("placement", "all"):
         from . import placement_bench as pb

@@ -1,0 +1,131 @@
+"""Simulator parity benchmarks: measured theta vs the analytic tables.
+
+Each row replays one (topology, pattern, routing) through repro.sim's
+saturation sweep and compares the measured knee against the fluid model:
+
+* ``parity`` rows run in the fluid limit (zero threshold, infinite
+  buffers) where the simulator must reproduce the registry theta —
+  ``max_rel_err`` is the relative gap vs the matching analytic model
+  (minimal / valiant / the exact ugal blend).  The headline acceptance
+  row is pn16 uniform: measured theta within 5% of Eq. 1's a = Δ·u/k̄.
+* ``band`` rows exercise what the closed form cannot price — a positive
+  threshold, finite buffers, or an adversary whose ideal blend is full
+  Valiant (local state cannot see the remote detour congestion, so
+  threshold-UGAL lands strictly inside the bracket).  ``max_rel_err`` is
+  the band violation: how far measured theta falls below theta_minimal
+  or above theta_ugal.  The acceptance row is the 8x16-torus tornado:
+  threshold-UGAL between theta_minimal and theta_ugal.
+
+``benchmarks.run --only sim`` serializes the table into BENCH_5.json and
+exits nonzero when any row exceeds ``--err-budget`` (fail-loud parity).
+
+Row budgets (loads bracket, steps, refine) are tuned so the whole table
+fits CI_SIM_BUDGET: probes bracket the knee at ~±6% and bisection
+tightens the stable side to ~2%.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import demi_pn_graph, oft_graph, pn_graph
+from repro.core.traffic import saturation_report
+from repro.fabric.model import torus3d_graph
+from repro.sim import SimConfig, fluid_routing_spec, saturation_sweep
+
+
+@dataclass
+class SimCase:
+    name: str
+    graph_fn: object = field(repr=False)
+    pattern: str = "uniform"
+    routing: str = "minimal"
+    kind: str = "parity"            # parity | band
+    buffer: float = float("inf")
+    loads: tuple = (0.90, 1.06)     # fractions of the analytic reference
+    steps: int = 320
+    refine: int = 2
+
+
+SIM_CASES = [
+    # fluid-limit parity: the acceptance row (pn16 uniform within 5%)
+    SimCase("pn16:uniform:minimal", lambda: pn_graph(16),
+            "uniform", "minimal", loads=(0.95, 1.06), steps=48),
+    SimCase("pn16:uniform:ugal0", lambda: pn_graph(16),
+            "uniform", "ugal_threshold(0)", loads=(0.97, 1.08), steps=40,
+            refine=1),
+    SimCase("demi_pn16:uniform:minimal", lambda: demi_pn_graph(16),
+            "uniform", "minimal", steps=64),
+    SimCase("oft4:uniform:ugal0", lambda: oft_graph(4),
+            "uniform", "ugal_threshold(0)", steps=96),
+    SimCase("torus2d_8x16:uniform:minimal", lambda: torus3d_graph(8, 16, 1),
+            "uniform", "minimal"),
+    SimCase("torus2d_8x16:tornado:minimal", lambda: torus3d_graph(8, 16, 1),
+            "tornado", "minimal"),
+    SimCase("torus2d_8x16:tornado:valiant", lambda: torus3d_graph(8, 16, 1),
+            "tornado", "valiant"),
+    # the acceptance band row: threshold-UGAL on tornado's home ground
+    # lands between theta_minimal and theta_ugal (and in the fluid limit
+    # reproduces the blend, so it is also held to parity)
+    SimCase("torus2d_8x16:tornado:ugal0", lambda: torus3d_graph(8, 16, 1),
+            "tornado", "ugal_threshold(0)", kind="both", refine=3),
+    # beyond the closed form: a positive margin (theta unchanged, only
+    # the diversion onset moves), finite buffers (backpressure), and an
+    # adversary whose ideal blend is full Valiant (local state lands
+    # strictly inside the bracket)
+    SimCase("torus2d_8x16:tornado:ugal2", lambda: torus3d_graph(8, 16, 1),
+            "tornado", "ugal_threshold(2)", kind="band", refine=3),
+    SimCase("torus2d_8x16:tornado:ugal0:buf8", lambda: torus3d_graph(8, 16, 1),
+            "tornado", "ugal_threshold(0)", kind="band", buffer=8.0),
+    SimCase("demi_pn16:tornado:ugal0", lambda: demi_pn_graph(16),
+            "tornado", "ugal_threshold(0)", kind="band", steps=64),
+]
+
+
+def sim_cases():
+    return [(c.name, c) for c in SIM_CASES]
+
+
+def sim_one(case: SimCase) -> tuple[dict, float]:
+    """Run one row; returns ``(row, max_rel_err)``.
+
+    ``row`` records the measured theta/bracket/alpha plus the analytic
+    minimal / ugal / reference thetas; ``max_rel_err`` is the parity gap
+    (parity rows), the band violation (band rows), or the max of both."""
+    g = case.graph_fn()
+    cfg = SimConfig(routing=case.routing, buffer=case.buffer)
+    fluid = fluid_routing_spec(case.routing)
+    ref = saturation_report(g, case.pattern, routing=fluid)
+    sweep = saturation_sweep(
+        g, case.pattern, routing=case.routing,
+        loads=np.asarray(case.loads) * ref.theta,
+        steps=case.steps, refine=case.refine, config=cfg,
+        theta_analytic=ref.theta)
+    th_min = (ref.theta if fluid == "minimal" else
+              saturation_report(g, case.pattern, routing="minimal").theta)
+    th_ugal = (ref.theta if fluid == "ugal" else
+               saturation_report(g, case.pattern, routing="ugal").theta)
+
+    parity = abs(sweep.theta - sweep.theta_analytic) / sweep.theta_analytic
+    lo, hi = min(th_min, th_ugal), max(th_min, th_ugal)
+    band = max(0.0, (lo - sweep.theta) / lo, (sweep.theta - hi) / hi)
+    err = {"parity": parity, "band": band,
+           "both": max(parity, band)}[case.kind]
+
+    stable = [r for r in sweep.runs if r.offered <= sweep.theta * (1 + 1e-12)]
+    alpha = stable[-1].alpha if stable else float("nan")
+    row = {
+        "case": case.name, "pattern": sweep.pattern,
+        "routing": case.routing, "kind": case.kind,
+        "buffer": None if np.isinf(case.buffer) else case.buffer,
+        "theta_sim": sweep.theta,
+        "theta_unstable": (None if not np.isfinite(sweep.theta_unstable)
+                           else sweep.theta_unstable),
+        "theta_analytic": sweep.theta_analytic,
+        "theta_minimal": th_min, "theta_ugal": th_ugal,
+        "alpha_sim": alpha, "parity_err": parity, "band_err": band,
+        "steps": case.steps, "backend": sweep.runs[0].backend,
+    }
+    return row, err

@@ -67,16 +67,35 @@ def inspect(name: str, param: int, delta0: float | None):
     return g
 
 
-def patterns_table(g, specs, routing=None):
+def patterns_table(g, specs, routing=None, sim=False, sim_steps=None):
     """Theta/u per pattern under minimal and Valiant, plus an extra column
-    for ``routing`` (e.g. "ugal": the adaptive blend and its alpha)."""
+    for ``routing`` (e.g. "ugal": the adaptive blend and its alpha).
+
+    With ``sim=True`` two measured columns ride along (repro.sim): the
+    simulator's saturation knee under the chosen routing (per-hop
+    threshold-UGAL when ``--routing`` names a ugal variant) and the
+    Little's-law mean latency, in steps, at the sweep's lowest load
+    point — the queueing ground truth beside the fluid closed forms."""
     extra = None if routing in (None, "minimal", "valiant") else routing
+    if sim:
+        from repro.sim import saturation_sweep
+        from repro.sim.engine import parse_sim_routing
+        sim_routing = routing if routing else "minimal"
+        try:
+            parse_sim_routing(sim_routing)
+        except ValueError:
+            # fluid-only specs (e.g. "ugal(source)") map to their
+            # simulator counterpart: the per-hop threshold rule
+            sim_routing = ("ugal_threshold(0)" if "ugal" in str(sim_routing)
+                           else "minimal")
     print(f"{g.name}: saturation throughput theta (per-node injection, "
           f"link-equivalents) and balance u by pattern")
     head = (f"{'pattern':28s} {'theta_min':>9s} {'u_min':>7s} "
             f"{'theta_val':>9s} {'u_val':>7s} {'kbar_eff':>8s}")
     if extra:
         head += f" {'theta_' + extra[:4]:>10s} {'alpha':>6s}"
+    if sim:
+        head += f" {'theta_sim':>9s} {'lat_sim':>8s}"
     print(head)
     for spec in specs:
         rmin = saturation_report(g, spec, routing="minimal")
@@ -87,6 +106,10 @@ def patterns_table(g, specs, routing=None):
             rx = saturation_report(g, spec, routing=extra)
             alpha = "" if rx.alpha is None else f"{rx.alpha:6.3f}"
             line += f" {rx.theta:10.4f} {alpha:>6s}"
+        if sim:
+            sw = saturation_sweep(g, spec, routing=sim_routing,
+                                  steps=sim_steps, refine=1)
+            line += f" {sw.theta:9.4f} {sw.latency[0]:8.2f}"
         print(line)
 
 
@@ -118,6 +141,15 @@ def main():
                          "table (any repro.core.routing spec, e.g. 'ugal' "
                          "or 'ugal(source)'); minimal and Valiant always "
                          "print")
+    ap.add_argument("--sim", action="store_true",
+                    help="add measured-theta and mean-latency columns from "
+                         "the flow-level simulator (repro.sim) under the "
+                         "--routing model (per-hop threshold-UGAL for ugal "
+                         "specs); expect seconds-to-minutes per pattern on "
+                         "large instances")
+    ap.add_argument("--sim-steps", type=int, default=None, metavar="N",
+                    help="simulator steps per load point (default: sized "
+                         "from the topology's diameter)")
     args = ap.parse_args()
     if args.topology:
         g = inspect(args.topology, args.param, args.delta0)
@@ -126,7 +158,8 @@ def main():
             # split on commas outside parentheses: hot_region(0.2,4) is one spec
             specs = [s.strip() for s in
                      re.split(r",(?![^(]*\))", args.patterns) if s.strip()]
-            patterns_table(g, specs, routing=args.routing)
+            patterns_table(g, specs, routing=args.routing, sim=args.sim,
+                           sim_steps=args.sim_steps)
     if args.compare:
         compare(args.compare, args.radix)
     if not args.topology and not args.compare:

@@ -24,6 +24,7 @@ SLOW_BUDGET="${CI_SLOW_BUDGET:-600}"           # seconds
 BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"         # seconds
 ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}"     # seconds
 PLACEMENT_BUDGET="${CI_PLACEMENT_BUDGET:-300}" # seconds
+SIM_BUDGET="${CI_SIM_BUDGET:-900}"             # seconds
 
 echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
 timeout "$TIER1_BUDGET" python -m pytest -x -q
@@ -66,5 +67,11 @@ echo "== benchmarks: placement strategy/fragmentation table -> BENCH_4.json (bud
 # losing where it must win, or pn16's ep_heavy search not strictly
 # beating linear), mirroring the routing bench
 timeout "$PLACEMENT_BUDGET" python -m benchmarks.run --json BENCH_4.json --only placement
+
+echo "== benchmarks: simulator parity table -> BENCH_5.json (budget ${SIM_BUDGET}s) =="
+# benchmarks.run exits nonzero when any row's parity gap (measured vs
+# fluid theta) or band violation (threshold-UGAL outside the
+# [theta_minimal, theta_ugal] bracket) exceeds --err-budget
+timeout "$SIM_BUDGET" python -m benchmarks.run --json BENCH_5.json --only sim
 
 echo "== ci.sh green =="

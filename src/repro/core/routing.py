@@ -388,6 +388,42 @@ def _ugal_source_lp(g, demand, active, engine):
                          alphas=full)
 
 
+@register_routing("ugal_threshold")
+def _ugal_threshold(threshold: float = 0.0) -> RoutingModel:
+    """Fluid approximation of per-hop threshold-UGAL: divert a packet to
+    the Valiant detour only when the minimal queue's expected delay
+    exceeds the detour estimate by more than ``threshold`` flits.
+
+    In the fluid (infinite-buffer) limit the saturation throughput is
+    THRESHOLD-INVARIANT for any finite T: below the blend optimum the
+    margin keeps queues bounded and traffic minimal; at saturation the
+    minimal queues grow until the rule fires, so the steady-state split
+    converges to the same theta-maximizing blend — T only shifts the
+    queue depth (and therefore latency) at which diversion starts, which
+    the simulator (repro.sim) resolves and this closed form cannot.
+    ``ugal_threshold(inf)`` never diverts and degenerates to minimal —
+    the same degeneration a finite buffer shallower than T forces, since
+    a queue can then never grow past the margin (see docs/simulation.md).
+    The registry thus exposes the fluid approximation next to repro.sim's
+    measured ground truth under one spec family."""
+    t = float(threshold)
+    if not t >= 0.0:  # rejects negatives, -inf, and nan; +inf passes
+        raise ValueError(f"threshold must be >= 0 or inf, got {threshold!r}")
+    name = f"ugal_threshold({t:g})"
+
+    def evaluate(g, demand, active, engine=None):
+        if np.isinf(t):
+            loads, kbar, diam = _minimal_parts(g, demand, engine)
+            return RoutingResult(name, loads, kbar, int(diam), alpha=1.0)
+        res = _ugal_blend(g, demand, active, engine)
+        res.routing = name
+        return res
+
+    return RoutingModel(name, evaluate,
+                        "threshold-UGAL fluid limit (= the ugal blend; "
+                        "inf = minimal)")
+
+
 @register_routing("ugal")
 def _ugal(granularity: str = "global") -> RoutingModel:
     if granularity not in ("global", "source"):

@@ -127,7 +127,10 @@ class FabricModel:
         name = make_routing(routing).name  # validates the spec
         if name == "valiant":
             return "valiant"
-        if name in ("minimal", "ugal", "ugal(source)"):
+        if name in ("minimal", "ugal", "ugal(source)") \
+                or name.startswith("ugal_threshold"):
+            # every threshold variant shares the blend's uniform identity
+            # (alpha = 1 for finite T, minimal outright for T = inf)
             return "minimal"
         return "other"
 
@@ -170,6 +173,27 @@ class FabricModel:
                 f"N={self.graph.n} > {self.PATTERN_MAX_N}.")
         return placement_report(placement, profile, routing=routing,
                                 engine=engine)
+
+    def simulate_pattern(self, pattern, routing: str = "ugal_threshold(0)",
+                         offered: float | None = None,
+                         steps: int | None = None, config=None):
+        """Replay a traffic pattern through the flow-level simulator
+        (repro.sim) on this fabric: the measured counterpart of
+        ``pattern_report`` — per-hop threshold-UGAL, finite buffers, and
+        queueing latency instead of the fluid closed form.  ``offered``
+        defaults to 0.9x the matching fluid theta (a stable sub-saturation
+        point whose Little's-law latency is meaningful); returns the
+        SimRun (theta in link-equivalents, as everywhere)."""
+        from ..sim import fluid_routing_spec, simulate
+        if self.graph.n > self.PATTERN_MAX_N:
+            raise ValueError(
+                f"simulation needs dense (router, slot, dest) tensors; "
+                f"N={self.graph.n} > {self.PATTERN_MAX_N}.")
+        if offered is None:
+            offered = 0.9 * self.pattern_report(
+                pattern, fluid_routing_spec(routing)).theta
+        return simulate(self.graph, pattern, routing=routing,
+                        offered=offered, steps=steps, config=config)
 
     def pattern_kbar(self, pattern, routing: str = "minimal") -> float:
         """Demand-weighted mean hop count under the pattern (2 phases under

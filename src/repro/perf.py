@@ -118,6 +118,10 @@ class PerfFlags:
     # releases the GIL in GEMM/ufunc loops, so 2 single-BLAS-thread sweeps
     # overlap ~perfectly on 2 cores).  1 = sequential.
     util_workers: int = 2
+    # Flow-level simulator backend (repro.sim): auto | numpy | jax.
+    # auto picks the jit-compiled jax step for large (N * degree * dests)
+    # instances and the numpy reference otherwise.
+    sim_backend: str = "auto"
 
 
 _FLAGS = PerfFlags()

@@ -1,0 +1,363 @@
+"""repro.sim — a JAX-vectorized flow-level network simulator: the
+queueing-dynamics ground truth behind the analytical theta tables.
+
+The analytical stack (repro.core.traffic / routing) prices every topology
+under *fluid* routing models: loads are closed-form path integrals, UGAL
+is the theta-optimal convex blend.  Real routers make per-hop decisions
+on local queue state, divert only past a threshold, and run out of buffer
+— none of which a closed form sees.  This package replays the same
+demand matrices (every ``TrafficPattern``, ad-hoc matrices, and the
+placement pipeline's byte matrices) through a time-stepped simulator
+whose inner loop is fully vectorized over ``(router, out-slot, dest)``
+tensors — numpy float64 as the reference backend, a jit-compiled JAX
+step for large instances — with:
+
+  * ``minimal`` / ``valiant`` / per-hop ``ugal_threshold(T)`` router
+    models (UGAL-L on local output-queue backlog),
+  * three virtual channels (minimal, Valiant leg 1, leg 2) with finite
+    per-router buffers and credit-based backpressure,
+  * open-loop injectors driven by any pattern from the traffic registry.
+
+Entry points
+------------
+``simulate(g, pattern, routing=..., offered=...)`` runs one offered load
+and reports delivered throughput, Little's-law mean latency, and the
+measured minimal fraction alpha.  ``saturation_sweep`` ramps offered
+load, returns the latency-vs-load curve plus the measured saturation
+throughput ``theta`` — directly comparable to the analytic
+``saturation_report`` theta in the zero-threshold / infinite-buffer
+limit (the parity seam tested in tests/test_sim.py and benchmarked into
+BENCH_5.json).  ``simulate_placement`` replays a (StepProfile,
+Placement) byte matrix with fabric.placement's busiest-chip
+normalization, so measured theta is comparable to ``placement_report``.
+
+See docs/simulation.md for the step semantics, the credit model, the
+threshold rule, and the exact parity conditions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.traffic import make_pattern, normalize_demand, saturation_report
+from .engine import (SIM_JAX_MIN_WORK, SimConfig, SimState, init_state,
+                     make_step, parse_sim_routing, pick_backend)
+from .tables import RouteTables, build_tables
+
+__all__ = [
+    "SimConfig", "SimRun", "SimSweep", "Simulator", "simulate",
+    "saturation_sweep", "simulate_placement", "fluid_routing_spec",
+    "DEFAULT_LOAD_GRID", "SIM_MAX_CELLS",
+]
+
+# offered-load grid of a sweep, as fractions of the analytic fluid theta:
+# four sub-saturation points for the latency curve plus one past
+# saturation to pin the delivered-throughput plateau
+DEFAULT_LOAD_GRID = (0.3, 0.6, 0.85, 1.0, 1.2)
+
+# densest instance the dense per-dest state supports: three (N, K, M)
+# float64 VC tensors plus same-shape step temporaries (~2 GB at the cap)
+SIM_MAX_CELLS = 50_000_000
+
+
+def fluid_routing_spec(sim_routing) -> str:
+    """The repro.core.routing spec whose fluid theta the simulator
+    converges to in the zero-threshold / infinite-buffer limit:
+    ``minimal`` and ``valiant`` map to themselves, every finite
+    ``ugal_threshold(T)`` to the exact ``ugal`` blend — and T = inf to
+    ``minimal``, since an infinite margin never diverts (same
+    degeneration as the core registry's analytic entry)."""
+    mode, t = parse_sim_routing(sim_routing)
+    if mode == "ugal" and np.isinf(t):
+        return "minimal"
+    return {"minimal": "minimal", "valiant": "valiant", "ugal": "ugal"}[mode]
+
+
+@dataclass
+class SimRun:
+    """Steady-state measurements of one (demand, routing, offered) run.
+
+    ``theta`` is the delivered per-step throughput in the demand's own
+    normalization (busiest source = 1 unit for registry patterns, so it
+    is directly comparable to the analytic theta); ``latency`` the
+    Little's-law mean steps in the network (>= mean hops; meaningful
+    below saturation — past it, it grows with the run length);
+    ``alpha`` the measured fraction of accepted fluid that was never
+    diverted; ``residual`` the relative flow-conservation defect."""
+
+    routing: str
+    offered: float
+    theta: float
+    delivered_rate: float
+    accepted_rate: float
+    latency: float
+    alpha: float
+    occupancy: float
+    src_backlog: float
+    residual: float
+    steps: int
+    window: int
+    backend: str
+    history: dict = field(repr=False, default_factory=dict)
+
+
+@dataclass
+class SimSweep:
+    """A latency-vs-offered-load curve plus the measured saturation
+    throughput.
+
+    ``theta`` is the knee of the throughput curve: the largest offered
+    load the fabric demonstrably sustains (delivered/offered >=
+    ``stable_ratio`` over the measurement window), refined by bisection
+    between the last stable and first unstable probe.  Past the knee an
+    open-loop fluid network *collapses* (sustained over-injection lets
+    young fluid crowd transit fluid out of the proportional arc shares),
+    so the over-saturated delivered rate understates capacity — the knee,
+    not the plateau, is the analytic theta's counterpart.
+    ``theta_unstable`` is the smallest offered load observed to collapse
+    (the bracket's other side; inf if every probe was stable),
+    ``theta_analytic`` the fluid-model reference that scaled the grid."""
+
+    pattern: str
+    routing: str
+    theta: float
+    theta_unstable: float
+    theta_analytic: float
+    stable_ratio: float
+    loads: np.ndarray
+    delivered: np.ndarray
+    latency: np.ndarray
+    alpha: np.ndarray
+    runs: list = field(repr=False, default_factory=list)
+
+
+class Simulator:
+    """One compiled simulator instance: routing tables + a backend step
+    function for a ``(graph, active set, config)`` triple, reusable
+    across demand matrices and offered loads (one jit compilation serves
+    a whole sweep)."""
+
+    def __init__(self, g: Graph, config: SimConfig = SimConfig(),
+                 targets_mask: np.ndarray | None = None):
+        self.g = g
+        self.config = config
+        if targets_mask is None:
+            targets_mask = g.meta.get("leaf_mask")
+        self.active = (np.arange(g.n) if targets_mask is None
+                       else np.nonzero(np.asarray(targets_mask, bool))[0])
+        work = g.n * g.max_degree * len(self.active)
+        if work > SIM_MAX_CELLS:
+            raise ValueError(
+                f"simulation state is dense (router, out-slot, dest) "
+                f"tensors: {work} cells > SIM_MAX_CELLS={SIM_MAX_CELLS} "
+                f"(~{8 * 3 * SIM_MAX_CELLS >> 30} GB of queue state).  "
+                f"Use a smaller instance of the same family.")
+        self.backend = pick_backend(config.backend, work)
+        # float64 on both backends: the jax step runs under a scoped
+        # enable_x64 — float32 rounding bias visibly shifts the threshold
+        # rule's diversion duty cycle (backends would disagree)
+        self.dtype = np.float64
+        self.tables = build_tables(g, self.active, dtype=self.dtype)
+        self._step = make_step(self.tables, config, self.backend, self.dtype)
+
+    def default_steps(self) -> int:
+        """Enough steps for the slowest feedback loop to settle: several
+        two-leg traversals plus a fixed transient allowance."""
+        dmax = int(self.tables.dist_act.max())
+        return 48 + 16 * 2 * dmax
+
+    def run(self, demand: np.ndarray, offered: float,
+            steps: int | None = None, window: int | None = None) -> SimRun:
+        """Open-loop run: every source offers ``offered * demand[s, :]``
+        per step; measurements average the trailing ``window`` steps.
+        ``demand`` is a dense (N, N) matrix in the caller's normalization
+        (diagonal and inactive columns must be zero)."""
+        t = self.tables
+        demand = np.asarray(demand, dtype=np.float64)
+        if demand.shape != (t.n, t.n):
+            raise ValueError(f"demand is {demand.shape}, graph has N={t.n}")
+        inj_norm = demand[:, t.active]
+        lost = demand.sum() - inj_norm.sum()
+        if lost > 1e-9 * max(demand.sum(), 1.0):
+            raise ValueError("demand addresses routers outside the active "
+                             "set; pass a matching targets_mask")
+        if np.abs(np.diagonal(demand)).sum() > 1e-9 * max(demand.sum(), 1.0):
+            raise ValueError("demand has self-addressed (diagonal) entries; "
+                             "zero the diagonal (TrafficPattern.demand and "
+                             "placement_demand already do)")
+        if inj_norm.sum() <= 0:
+            raise ValueError("demand matrix is all zero")
+        steps = self.default_steps() if steps is None else int(steps)
+        window = max(steps // 3, 8) if window is None else int(window)
+        window = min(window, steps)
+
+        inj = (offered * inj_norm).astype(self.dtype)
+        inj_cap = (self.config.inj_factor * offered
+                   * inj_norm.sum(axis=1)).astype(self.dtype)
+        # host numpy in, host numpy out: the jax step converts on entry
+        # (under its enable_x64 scope, so float64 survives the round trip)
+        st = init_state(t, self.dtype).as_tuple()
+        hist = np.empty((steps, 6), dtype=np.float64)
+        for i in range(steps):
+            st, stats = self._step(st, inj, inj_cap)
+            hist[i] = np.asarray(stats, dtype=np.float64)
+        # final fluid state, host-side (tests probe buffer occupancies)
+        self.last_state = SimState(*(np.asarray(a) for a in st))
+
+        total = float(inj_norm.sum())
+        w = hist[-window:]
+        delivered_rate = float(w[:, 0].mean())
+        accepted_rate = float(w[:, 1].mean())
+        occupancy = float(w[:, 3].mean())
+        src_backlog = float(hist[-1, 4])
+        injected_cum = float(hist[:, 2].sum())
+        delivered_cum = float(hist[:, 0].sum())
+        residual = abs(injected_cum - delivered_cum - float(hist[-1, 3])
+                       - src_backlog) / max(injected_cum, 1e-30)
+        acc_cum = float(hist[:, 1].sum())
+        alpha = 1.0 - float(hist[:, 5].sum()) / max(acc_cum, 1e-30)
+        latency = occupancy / max(delivered_rate, 1e-30)
+        return SimRun(
+            routing=self.config.routing, offered=float(offered),
+            theta=delivered_rate / total, delivered_rate=delivered_rate,
+            accepted_rate=accepted_rate, latency=latency, alpha=alpha,
+            occupancy=occupancy, src_backlog=src_backlog, residual=residual,
+            steps=steps, window=window, backend=self.backend,
+            history={"delivered": hist[:, 0] / total,
+                     "accepted": hist[:, 1] / total,
+                     "offered": hist[:, 2] / total,
+                     "occupancy": hist[:, 3], "src_backlog": hist[:, 4],
+                     "diverted": hist[:, 5]})
+
+
+def _demand_for(g: Graph, pattern, targets_mask, normalize: bool):
+    if targets_mask is None:
+        targets_mask = g.meta.get("leaf_mask")
+    pat = make_pattern(pattern)
+    demand = pat.demand(g, targets_mask)
+    if normalize:
+        demand = normalize_demand(demand)
+    return pat, demand, targets_mask
+
+
+def simulate(g: Graph, pattern, routing: str = "minimal",
+             offered: float = 0.5, steps: int | None = None,
+             config: SimConfig | None = None,
+             targets_mask: np.ndarray | None = None,
+             normalize: bool = True) -> SimRun:
+    """Simulate one (pattern, routing, offered load) point.
+
+    ``pattern`` is any repro.core.traffic spec (registry name,
+    TrafficPattern, or raw (N, N) matrix); ``offered`` is the injection
+    rate of the busiest source in link-equivalents (the analytic theta's
+    units).  ``config`` overrides buffers/backend; its routing field is
+    superseded by ``routing``."""
+    cfg = _config_with(config, routing)
+    _, demand, targets_mask = _demand_for(g, pattern, targets_mask, normalize)
+    return Simulator(g, cfg, targets_mask).run(demand, offered, steps)
+
+
+def _config_with(config: SimConfig | None, routing: str) -> SimConfig:
+    base = config or SimConfig()
+    parse_sim_routing(routing)  # validate before building tables
+    return SimConfig(routing=routing, buffer=base.buffer,
+                     capacity=base.capacity, inj_factor=base.inj_factor,
+                     backend=base.backend)
+
+
+def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
+                     loads=None, steps: int | None = None,
+                     config: SimConfig | None = None,
+                     targets_mask: np.ndarray | None = None,
+                     refine: int = 3, stable_ratio: float = 0.98,
+                     theta_analytic: float | None = None) -> SimSweep:
+    """Latency-vs-offered-load curve and measured saturation throughput
+    for one (topology, pattern, routing).
+
+    ``loads`` defaults to :data:`DEFAULT_LOAD_GRID` times the analytic
+    fluid theta of the matching registry model (minimal / valiant / the
+    ugal blend), so the grid brackets the expected saturation point; the
+    grid is extended when every probe lands on one side.  The measured
+    ``theta`` is the largest offered load whose delivered/offered ratio
+    stays >= ``stable_ratio``, sharpened by ``refine`` bisection probes
+    inside the (stable, unstable) bracket.  Pass ``theta_analytic`` to
+    reuse an already-computed fluid reference (skips one analytic
+    solve)."""
+    cfg = _config_with(config, routing)
+    pat, demand, targets_mask = _demand_for(g, pattern, targets_mask, True)
+    ref = (theta_analytic if theta_analytic is not None else
+           saturation_report(g, pat, routing=fluid_routing_spec(routing),
+                             targets_mask=targets_mask).theta)
+    if loads is None:
+        loads = np.asarray(DEFAULT_LOAD_GRID) * ref
+    loads = np.sort(np.asarray(loads, dtype=np.float64))
+    simr = Simulator(g, cfg, targets_mask)
+    grid = [simr.run(demand, lam, steps) for lam in loads]
+    runs = list(grid)
+
+    def stable(r):
+        return r.theta >= stable_ratio * r.offered
+
+    # extend the bracket when the grid missed the knee entirely
+    for _ in range(2):
+        if any(stable(r) for r in runs):
+            break
+        runs.append(simr.run(demand, 0.5 * min(r.offered for r in runs),
+                             steps))
+    for _ in range(2):
+        if any(not stable(r) for r in runs):
+            break
+        runs.append(simr.run(demand, 1.4 * max(r.offered for r in runs),
+                             steps))
+
+    lo = max((r.offered for r in runs if stable(r)), default=0.0)
+    unstable = [r.offered for r in runs if not stable(r) and r.offered > lo]
+    hi = min(unstable) if unstable else float("inf")
+    if lo > 0.0 and np.isfinite(hi):
+        for _ in range(refine):
+            mid = 0.5 * (lo + hi)
+            r = simr.run(demand, mid, steps)
+            runs.append(r)
+            if stable(r):
+                lo = mid
+            else:
+                hi = mid
+    return SimSweep(
+        pattern=pat.name, routing=cfg.routing, theta=lo, theta_unstable=hi,
+        theta_analytic=float(ref), stable_ratio=stable_ratio,
+        loads=np.array([r.offered for r in grid]),
+        delivered=np.array([r.theta for r in grid]),
+        latency=np.array([r.latency for r in grid]),
+        alpha=np.array([r.alpha for r in grid]), runs=runs)
+
+
+def simulate_placement(placement, profile, routing: str = "ugal_threshold(0)",
+                       offered: float | None = None,
+                       steps: int | None = None,
+                       config: SimConfig | None = None,
+                       axis_of=None) -> SimRun:
+    """Replay a (StepProfile, Placement) byte matrix through the
+    simulator in fabric.placement's normalization: demand is scaled so
+    the busiest CHIP injects one unit (``chip_wire_bytes``), making the
+    measured theta directly comparable to ``placement_report``'s.
+    ``offered`` defaults to 1.2x the analytic theta so the run reports
+    the saturation plateau."""
+    from ..fabric.placement import (chip_wire_bytes, placement_demand,
+                                    placement_report)
+    cfg = _config_with(config, routing)
+    demand = placement_demand(profile, placement, axis_of)
+    per_chip = chip_wire_bytes(profile, placement.mesh_shape,
+                               placement.axis_names, axis_of)
+    if per_chip == 0.0 or not demand.any():
+        raise ValueError("placement demand is all router-local; "
+                         "nothing to simulate")
+    norm = demand / per_chip
+    if offered is None:
+        ref = placement_report(placement, profile,
+                               routing=fluid_routing_spec(routing),
+                               axis_of=axis_of).theta
+        offered = 1.2 * ref
+    return Simulator(placement.graph, cfg).run(norm, offered, steps)

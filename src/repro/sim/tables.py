@@ -1,0 +1,104 @@
+"""Precomputed routing structure for the flow-level simulator.
+
+The simulator's inner loop is pure tensor algebra; everything that depends
+only on the topology (shortest-path next-hop splits, delivery masks, the
+Valiant intermediate spread, remaining-hop estimates for the UGAL rule) is
+compiled once per ``(graph, active)`` pair into dense arrays laid out over
+``(router, out-slot, dest)``:
+
+  * out-slot ``k`` of router ``r`` is directed arc ``indptr[r] + k`` — the
+    ``(N, degree)`` plane is the padded per-router view of the graph's arc
+    order, so occupancy tensors are the ``(N, degree, vc)`` arrays the
+    credit machinery reasons about;
+  * the dest axis is restricted to the ``active`` set (all routers, or the
+    leaf set of an indirect network) — spine routers of an OFT carry
+    transit fluid but are never a routing destination.
+
+``SPLIT[r, k, d]`` is the fraction of fluid at ``r`` headed for active
+dest ``d`` that leaves through slot ``k`` under equal-split minimal
+routing: ``1/m`` over the ``m`` out-arcs that lie on a shortest path,
+0 elsewhere.  This is exactly the per-hop ECMP split the analytical
+engines (repro.core.utilization) integrate in closed form, which is what
+makes the zero-threshold / infinite-buffer simulation converge to the
+fluid theta (see docs/simulation.md, "parity conditions").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.graph import Graph, bfs_distances_batched
+
+__all__ = ["RouteTables", "build_tables"]
+
+
+@dataclass
+class RouteTables:
+    """Topology-dependent constants of one simulator instance.
+
+    Shapes: N routers, K = max degree (padded out-slots), M active dests.
+    """
+
+    n: int
+    k: int
+    m: int
+    active: np.ndarray          # (M,) router id of each dest index
+    head: np.ndarray = field(repr=False)       # (N, K) int, pad = N
+    split: np.ndarray = field(repr=False)      # (N, K, M) minimal ECMP split
+    deliver: np.ndarray = field(repr=False)    # (N, K, M) bool, head == dest
+    spread: np.ndarray = field(repr=False)     # (N, M) Valiant intermediates
+    dist_act: np.ndarray = field(repr=False)   # (N, M) hops to each dest
+    hval_rem: np.ndarray = field(repr=False)   # (N, M) mean two-leg estimate
+
+
+def build_tables(g: Graph, active: np.ndarray,
+                 dtype=np.float64) -> RouteTables:
+    """Compile the dense routing tables for ``g`` restricted to ``active``
+    destinations.  One batched all-source BFS plus O(N * K * M) table
+    fills; the result is reused across every run on the same instance."""
+    active = np.asarray(active, dtype=np.int64)
+    n, m = g.n, len(active)
+    if m < 2:
+        raise ValueError("need at least 2 active vertices")
+    deg = g.degrees
+    k = int(deg.max())
+
+    dist = bfs_distances_batched(g, np.arange(n)).astype(np.int32)
+    if (dist < 0).any():
+        raise ValueError("graph is disconnected")
+
+    head = np.full((n, k), n, dtype=np.int64)
+    for r in range(n):
+        d = int(deg[r])
+        head[r, :d] = g.indices[g.indptr[r]: g.indptr[r + 1]]
+
+    # dist from each slot's head router to each active dest; padded slots
+    # get an unreachable sentinel so they never look like a next hop
+    dist_pad = np.vstack([dist, np.full((1, n), np.iinfo(np.int32).max // 2,
+                                        dtype=np.int32)])
+    dist_act = dist[:, active]                        # (N, M)
+    head_dist = dist_pad[head][:, :, active]          # (N, K, M)
+    min_mask = head_dist == (dist_act[:, None, :] - 1)
+    count = min_mask.sum(axis=1)                      # (N, M)
+    split = (min_mask / np.maximum(count, 1)[:, None, :]).astype(dtype)
+
+    deliver = head[:, :, None] == active[None, None, :]
+    # Valiant intermediate spread: uniform over active mids other than the
+    # diverting router itself (rows of routers outside the active set use
+    # all m mids), normalized per row so diversion conserves fluid
+    not_self = active[None, :] != np.arange(n)[:, None]
+    spread = (not_self / not_self.sum(axis=1, keepdims=True)).astype(dtype)
+
+    # remaining-hop estimates for the per-hop UGAL rule: minimal is the
+    # true distance; the Valiant detour from r to d is estimated as the
+    # mean over intermediates of dist(r, m) + dist(m, d)
+    mean_to_mid = dist[:, active].mean(axis=1)        # (N,)
+    mean_from_mid = dist[np.ix_(active, active)].mean(axis=0)  # (M,)
+    hval_rem = (mean_to_mid[:, None] + mean_from_mid[None, :]).astype(dtype)
+
+    return RouteTables(
+        n=n, k=k, m=m, active=active, head=head, split=split,
+        deliver=deliver, spread=spread, dist_act=dist_act.astype(dtype),
+        hval_rem=hval_rem)

@@ -499,3 +499,44 @@ def test_hyp_uniform_reduction_everywhere(seed):
     rug = saturation_report(g, "uniform", routing="ugal")
     assert rug.alpha == 1.0
     assert np.array_equal(rug.loads, rmin.loads)
+
+
+# ---------------------------------------------------------------------------
+# ugal_threshold: the fluid approximation of the per-hop threshold rule
+# ---------------------------------------------------------------------------
+
+
+def test_ugal_threshold_fluid_is_threshold_invariant():
+    """Any finite margin reaches the same saturation blend in the fluid
+    limit: theta and loads match the exact ugal optimum bitwise, only the
+    model name records the threshold (repro.sim resolves what T actually
+    changes — the diversion onset and latency)."""
+    g = torus3d_graph(8, 16, 1)
+    blend = saturation_report(g, "tornado", routing="ugal")
+    for spec in ("ugal_threshold", "ugal_threshold(0)", "ugal_threshold(2)",
+                 "ugal_threshold(7.5)"):
+        rep = saturation_report(g, "tornado", routing=spec)
+        assert rep.theta == blend.theta
+        assert rep.alpha == blend.alpha
+        assert np.array_equal(rep.loads, blend.loads)
+    assert saturation_report(g, "tornado",
+                             routing="ugal_threshold(2)").routing \
+        == "ugal_threshold(2)"
+
+
+def test_ugal_threshold_inf_degenerates_to_minimal():
+    g = torus3d_graph(8, 16, 1)
+    rmin = saturation_report(g, "tornado", routing="minimal")
+    rinf = saturation_report(g, "tornado", routing="ugal_threshold(inf)")
+    assert rinf.theta == rmin.theta
+    assert np.array_equal(rinf.loads, rmin.loads)
+    assert rinf.alpha == 1.0
+    assert rinf.routing == "ugal_threshold(inf)"
+
+
+def test_ugal_threshold_validates_and_lists():
+    assert "ugal_threshold" in ROUTINGS
+    with pytest.raises(ValueError):
+        make_routing("ugal_threshold(-3)")
+    m = make_routing("ugal_threshold(1.5)")
+    assert m.name == "ugal_threshold(1.5)"

@@ -1,0 +1,261 @@
+"""repro.sim: fluid-limit parity, threshold/buffer semantics, determinism,
+and flow conservation.
+
+The parity seam (docs/simulation.md): with zero threshold and infinite
+buffers the simulator's saturation knee must reproduce the analytic
+theta of the matching registry model — minimal and valiant everywhere,
+and the exact ugal blend where the optimum is interior (the 8x16-torus
+tornado).  Stability probes here assert the two sides of the knee
+directly (delivered tracks offered just below the analytic theta,
+collapses above) instead of running full bisection sweeps — same
+physics, a fraction of the wall time; BENCH_5.json carries the refined
+bisection numbers.
+
+Conservation is exact by construction (every step moves fluid between
+ledger entries), so the residual invariant is checked in hypothesis form
+over random patterns/loads AND as a deterministic sweep (the repo's
+test_traffic_properties convention)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import oft_graph, pn_graph
+from repro.core.traffic import make_pattern, normalize_demand, saturation_report
+from repro.fabric.model import torus3d_graph
+from repro.sim import (SimConfig, Simulator, fluid_routing_spec,
+                       saturation_sweep, simulate, simulate_placement)
+from repro.sim.engine import parse_sim_routing, pick_backend
+
+TORUS = torus3d_graph(8, 16, 1)
+TH_UNIFORM_MIN = 0.4961  # analytic references on the 8x16 torus (BENCH_3)
+TH_TORNADO_MIN = 1.0 / 3.0
+TH_TORNADO_UGAL = 0.4147
+TH_TORNADO_VAL = 0.2480
+
+
+def _ratio(run):
+    return run.theta / run.offered
+
+
+# ---------------------------------------------------------------------------
+# fluid-limit parity: torus2d_8x16 (uniform + tornado)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern,routing,theta", [
+    ("uniform", "minimal", TH_UNIFORM_MIN),
+    ("tornado", "minimal", TH_TORNADO_MIN),
+    ("tornado", "valiant", TH_TORNADO_VAL),
+])
+def test_fluid_parity_torus_pure(pattern, routing, theta):
+    ref = saturation_report(TORUS, pattern, routing=routing).theta
+    assert ref == pytest.approx(theta, rel=2e-3)
+    below = simulate(TORUS, pattern, routing=routing, offered=0.97 * ref,
+                     steps=280)
+    assert _ratio(below) > 0.99          # sustains just below analytic theta
+    above = simulate(TORUS, pattern, routing=routing, offered=1.12 * ref,
+                     steps=280)
+    assert _ratio(above) < 0.97          # collapses just above it
+
+
+def test_fluid_parity_torus_tornado_ugal():
+    """Zero-threshold / infinite-buffer UGAL reproduces the exact blend
+    theta on tornado's home ground — the optimum is interior (alpha
+    ~0.40), so this is the real adaptive-routing claim, not a relabeled
+    minimal run.  Measured diversion matches the blend's alpha."""
+    ref = saturation_report(TORUS, "tornado", routing="ugal")
+    assert ref.theta == pytest.approx(TH_TORNADO_UGAL, rel=2e-3)
+    below = simulate(TORUS, "tornado", routing="ugal_threshold(0)",
+                     offered=0.97 * ref.theta, steps=400)
+    assert _ratio(below) > 0.99
+    assert below.theta > 1.1 * TH_TORNADO_MIN   # genuinely beats minimal
+    assert below.alpha == pytest.approx(ref.alpha, abs=0.12)
+    above = simulate(TORUS, "tornado", routing="ugal_threshold(0)",
+                     offered=1.12 * ref.theta, steps=400)
+    assert _ratio(above) < 0.97
+
+
+def test_ugal_stays_minimal_below_saturation():
+    """On balanced traffic the threshold rule never fires below
+    saturation: alpha == 1 exactly and latency is the zero-load hop
+    count (Little's law on the uncongested pipeline)."""
+    r = simulate(TORUS, "uniform", routing="ugal_threshold(0)",
+                 offered=0.8 * TH_UNIFORM_MIN, steps=200)
+    assert _ratio(r) > 0.999
+    assert r.alpha == 1.0
+    kbar = TORUS.average_distance()
+    assert r.latency == pytest.approx(kbar, rel=0.05)
+
+
+def test_threshold_delays_diversion():
+    """A positive margin diverts later: at the same sub-saturation load
+    the T=2 router keeps strictly more traffic minimal than T=0, while
+    both sustain the load (fluid theta is threshold-invariant)."""
+    lam = 0.85 * TH_TORNADO_UGAL
+    r0 = simulate(TORUS, "tornado", routing="ugal_threshold(0)",
+                  offered=lam, steps=300)
+    r2 = simulate(TORUS, "tornado", routing="ugal_threshold(2)",
+                  offered=lam, steps=300)
+    assert _ratio(r0) > 0.98 and _ratio(r2) > 0.98
+    assert r2.alpha > r0.alpha + 0.1
+
+
+# ---------------------------------------------------------------------------
+# fluid-limit parity: pn16 (the acceptance case) and the leaf-restricted OFT
+# ---------------------------------------------------------------------------
+
+
+def test_fluid_parity_pn16_uniform():
+    """pn16 uniform: stable at 0.95x the analytic theta, collapsed at
+    1.12x — bracketing the measured knee within the 5%-parity claim that
+    BENCH_5.json's bisection pins more tightly."""
+    ref = saturation_report(pn_graph(16), "uniform", routing="minimal").theta
+    assert ref == pytest.approx(6.9714, rel=2e-3)
+    simr = Simulator(pn_graph(16), SimConfig(routing="minimal"))
+    demand = normalize_demand(make_pattern("uniform").demand(simr.g))
+    below = simr.run(demand, 0.95 * ref, steps=40)
+    assert _ratio(below) > 0.99
+    above = simr.run(demand, 1.12 * ref, steps=40)
+    assert _ratio(above) < 0.97
+
+
+def test_oft4_leaf_restricted():
+    """Indirect network seam: only leaves inject/eject, spine routers
+    carry transit fluid; the knee matches the leaf-normalized theta."""
+    g = oft_graph(4)
+    ref = saturation_report(g, "uniform", routing="minimal").theta
+    sw = saturation_sweep(g, "uniform", routing="minimal",
+                          loads=np.array([0.92, 1.1]) * ref,
+                          steps=96, refine=1)
+    assert sw.theta >= 0.92 * ref
+    assert sw.theta_unstable <= 1.1 * ref
+    spine = np.setdiff1d(np.arange(g.n), np.nonzero(g.meta["leaf_mask"])[0])
+    assert len(spine) > 0  # the case is genuinely indirect
+
+
+# ---------------------------------------------------------------------------
+# buffers, determinism, backends, conservation
+# ---------------------------------------------------------------------------
+
+
+def test_finite_buffers_bound_occupancy():
+    """Credit flow control keeps every router's per-vc occupancy at the
+    buffer depth (small overshoot allowed: blocked upstream fluid holds
+    its claim one step — the documented one-round credit approximation)."""
+    buf = 3.0
+    simr = Simulator(TORUS, SimConfig(routing="minimal", buffer=buf))
+    demand = normalize_demand(make_pattern("tornado").demand(TORUS))
+    r = simr.run(demand, 1.3 * TH_TORNADO_MIN, steps=200)
+    st = simr.last_state
+    for q in (st.q0, st.q1, st.q2):
+        per_router = q.sum(axis=(1, 2))
+        assert per_router.max() <= buf * 1.5 + 1.0
+    assert r.residual < 1e-12            # backpressure never loses fluid
+    assert r.src_backlog > 0.0           # the overload waits at the source
+
+
+def test_determinism():
+    runs = [simulate(TORUS, "random_permutation(7)",
+                     routing="ugal_threshold(0)", offered=0.3, steps=80)
+            for _ in range(2)]
+    assert np.array_equal(runs[0].history["delivered"],
+                          runs[1].history["delivered"])
+    assert runs[0].theta == runs[1].theta
+    other = simulate(TORUS, "random_permutation(8)",
+                     routing="ugal_threshold(0)", offered=0.3, steps=80)
+    assert not np.array_equal(runs[0].history["delivered"],
+                              other.history["delivered"])
+
+
+def test_backend_parity():
+    pytest.importorskip("jax")
+    demand = normalize_demand(make_pattern("tornado").demand(TORUS))
+    out = {}
+    for backend in ("numpy", "jax"):
+        simr = Simulator(TORUS, SimConfig(routing="ugal_threshold(0)",
+                                          backend=backend))
+        out[backend] = simr.run(demand, 0.38, steps=120)
+        assert simr.backend == backend
+    assert out["jax"].theta == pytest.approx(out["numpy"].theta, rel=1e-9)
+    assert out["jax"].alpha == pytest.approx(out["numpy"].alpha, rel=1e-6)
+
+
+SMALL = torus3d_graph(4, 4, 1)
+CONSERVE_CASES = [("uniform", "minimal", float("inf")),
+                  ("tornado", "ugal_threshold(0)", 4.0),
+                  ("shift(3)", "valiant", 2.0),
+                  ("hot_region(0.25,4)", "ugal_threshold(1)", 8.0)]
+
+
+def _check_conservation(pattern, routing, buffer, offered, steps=120):
+    r = simulate(SMALL, pattern, routing=routing, offered=offered,
+                 steps=steps, config=SimConfig(buffer=buffer))
+    assert r.residual < 1e-12
+    injected = r.history["offered"].sum()
+    delivered = r.history["delivered"].sum()
+    assert delivered <= injected * (1 + 1e-12)
+    return r
+
+
+@pytest.mark.parametrize("pattern,routing,buffer", CONSERVE_CASES)
+def test_flow_conservation(pattern, routing, buffer):
+    _check_conservation(pattern, routing, buffer, offered=0.5)
+    _check_conservation(pattern, routing, buffer, offered=2.0)  # overload
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**31 - 1),
+       offered=st.floats(0.05, 3.0),
+       buffer=st.sampled_from([2.0, 8.0, float("inf")]))
+def test_flow_conservation_hypothesis(seed, offered, buffer):
+    _check_conservation(f"random_permutation({seed})", "ugal_threshold(0)",
+                        buffer, offered, steps=60)
+
+
+# ---------------------------------------------------------------------------
+# placement replay and API validation
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_placement():
+    from repro.fabric.placement import Placement, placement_report
+    g = torus3d_graph(4, 4, 1)
+    p = Placement(graph=g, mesh_shape=(4, 4), axis_names=("data", "model"),
+                  router_of=np.arange(16))
+    schedule = {"data": ("ring", 64.0), "model": ("all_to_all", 64.0)}
+    ref = placement_report(p, schedule, routing="minimal").theta
+    r = simulate_placement(p, schedule, routing="minimal",
+                           offered=0.9 * ref, steps=160)
+    assert _ratio(r) > 0.99              # sustains below the analytic knee
+    assert r.residual < 1e-12
+    over = simulate_placement(p, schedule, routing="minimal", steps=160)
+    assert over.offered == pytest.approx(1.2 * ref)
+    assert over.theta <= over.offered * (1 + 1e-9)
+
+
+def test_spec_and_input_validation():
+    assert parse_sim_routing("ugal") == ("ugal", 0.0)
+    assert parse_sim_routing("ugal_threshold(2.5)") == ("ugal", 2.5)
+    assert parse_sim_routing("minimal")[0] == "minimal"
+    with pytest.raises(ValueError):
+        parse_sim_routing("ugal_threshold(-1)")
+    with pytest.raises(ValueError):
+        parse_sim_routing("minimal(3)")
+    with pytest.raises(ValueError):
+        parse_sim_routing("ecmp")
+    with pytest.raises(ValueError):
+        pick_backend("tpu", 10)
+    simr = Simulator(SMALL, SimConfig())
+    with pytest.raises(ValueError):
+        simr.run(np.zeros((4, 4)), 0.5)          # wrong shape
+    with pytest.raises(ValueError):
+        simr.run(np.zeros((16, 16)), 0.5)        # all-zero demand
+    g = oft_graph(4)
+    bad = np.ones((g.n, g.n))                    # targets a spine router
+    with pytest.raises(ValueError):
+        Simulator(g, SimConfig()).run(bad, 0.5)
