@@ -1,0 +1,92 @@
+"""Degradation-curve benchmark (BENCH_6): how much theta survives k dead
+links, per topology and routing model, plus one live-sim fault parity
+row.
+
+``fault_cases`` is the routing-bench zoo (paper families vs torus and
+dragonfly); ``fault_one`` runs ``repro.core.faults.degradation_sweep``
+at k in {0, 1, 2, 5} uniform link failures under minimal and UGAL and
+reports the mean/worst/percentile theta curves.  The recorded
+``max_rel_err`` is the largest relative MONOTONICITY violation of the
+mean and worst curves — theta-vs-k must be non-increasing (each trial's
+fault sets are nested prefixes of one failure order), so any positive
+jump is a fault-model bug, failed loudly by ``run.py --err-budget``.
+
+``sim_parity_row`` is the static-vs-dynamic seam in benchmark form: one
+seeded 2-link FaultSet on torus2d_8x16, measured as a knee once applied
+before t=0 and once injected mid-run (trailing window after the event);
+``max_rel_err`` is the relative knee gap, with the analytic degraded
+theta recorded alongside.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (degraded_report, degradation_sweep, pn_graph,
+                        random_faults)
+
+K_FAILURES = (0, 1, 2, 5)
+MODELS = ("minimal", "ugal")
+TRIALS = 4
+
+
+def fault_cases():
+    from repro.core import demi_pn_graph, dragonfly_graph, oft_graph
+    from repro.fabric.model import torus3d_graph
+    yield "pn16", pn_graph(16)
+    yield "demi_pn16", demi_pn_graph(16)
+    yield "oft4", oft_graph(4)
+    yield "torus2d_8x16", torus3d_graph(8, 16, 1)
+    yield "dragonfly3", dragonfly_graph(3)
+
+
+def fault_one(g, routing: str):
+    """One (topology, routing) degradation curve; returns ``(row, err)``
+    where err is the worst relative monotonicity violation."""
+    sw = degradation_sweep(g, k_failures=K_FAILURES, trials=TRIALS,
+                           pattern="uniform", routing=routing, kind="links",
+                           seed=0)
+    row = {
+        "routing": routing,
+        "k_failures": list(sw.k_failures),
+        "pristine_theta": sw.pristine_theta,
+        "mean_theta": [round(float(v), 6) for v in sw.mean],
+        "worst_theta": [round(float(v), 6) for v in sw.worst],
+        "best_theta": [round(float(v), 6) for v in sw.best],
+        "p10": [round(float(v), 6) for v in sw.bands[10]],
+        "p50": [round(float(v), 6) for v in sw.bands[50]],
+        "p90": [round(float(v), 6) for v in sw.bands[90]],
+        "trials": sw.trials,
+    }
+    viol = 0.0
+    for curve in (sw.mean, sw.worst):
+        jump = np.diff(curve)          # must be <= 0 everywhere
+        viol = max(viol, float(np.maximum(jump, 0.0).max() / curve[0]))
+    return row, viol
+
+
+def sim_parity_row():
+    """Static pre-applied fault vs the same fault mid-run: the measured
+    saturation knees must agree once the post-fault transient settles."""
+    from repro.fabric.model import torus3d_graph
+    from repro.sim import saturation_sweep
+    g = torus3d_graph(8, 16, 1)
+    fs = random_faults(g, k_links=2, seed=0)
+    ref = degraded_report(g, "uniform", fs, routing="minimal").theta
+    loads = np.array([0.96, 1.05]) * ref
+    static = saturation_sweep(g, "uniform", "minimal", loads=loads, refine=2,
+                              theta_analytic=ref, events=[(0, fs)])
+    steps = 648                        # event at 40%, window = last third
+    dynamic = saturation_sweep(g, "uniform", "minimal", loads=loads,
+                               refine=2, theta_analytic=ref, steps=steps,
+                               events=[(int(0.4 * steps), fs)])
+    gap = abs(static.theta - dynamic.theta) / max(static.theta, 1e-30)
+    row = {
+        "topology": "torus2d_8x16", "routing": "minimal",
+        "faults": fs.label,
+        "theta_analytic_degraded": round(float(ref), 6),
+        "theta_static": round(float(static.theta), 6),
+        "theta_dynamic": round(float(dynamic.theta), 6),
+        "knee_gap": round(float(gap), 6),
+    }
+    return row, float(gap)

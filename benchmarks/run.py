@@ -14,6 +14,11 @@ recorded:
     python -m benchmarks.run --json BENCH_topology.json --only tables
     python -m benchmarks.run --json BENCH_3.json --only routing
 
+Sections degrade gracefully: a crashed section is reported (and recorded
+under ``errors`` in the JSON payload) while the remaining sections still
+run and the partial artifact is still written — the run then exits
+nonzero, so CI fails without losing the data that DID compute.
+
 The arc-load engine behind the tables is selected by REPRO_PERF (see
 repro.perf); e.g. ``REPRO_PERF=util_engine=naive`` times the reference
 implementation for comparison.
@@ -26,6 +31,7 @@ import json
 import platform
 import sys
 import time
+import traceback
 
 
 def _run(records, name, fn, derive, err_of=None):
@@ -47,31 +53,44 @@ def main(argv=None) -> None:
                     help="write per-entry wall time + max_rel_err as JSON")
     ap.add_argument("--only",
                     choices=["tables", "figures", "traffic", "routing",
-                             "placement", "sim", "all"],
+                             "placement", "sim", "faults", "all"],
                     default="all",
                     help="restrict to the paper tables, figures, the "
                          "traffic-pattern saturation sweep, the "
                          "adversarial routing-model table, the "
-                         "placement strategy/fragmentation table, or "
-                         "the simulator parity table (BENCH_5)")
+                         "placement strategy/fragmentation table, the "
+                         "simulator parity table (BENCH_5), or the "
+                         "fault degradation curves (BENCH_6)")
     ap.add_argument("--err-budget", type=float, default=0.25, metavar="E",
                     help="fail (exit 1) when any entry's max_rel_err exceeds "
                          "E instead of only recording it (negative: record "
                          "only)")
     args = ap.parse_args(argv)
 
-    from . import paper_tables as tabs
-
     records: list[dict] = []
+    errors: list[dict] = []
     print("name,us_per_call,derived")
-    if args.only in ("tables", "all"):
+
+    def section(name, body):
+        """Run one bench section; a crash is reported and recorded but
+        never takes the other sections (or the JSON artifact) with it."""
+        try:
+            body()
+        except Exception as e:
+            print(f"# SECTION FAILED [{name}]: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            errors.append({"section": name,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()})
+
+    def run_tables():
+        from . import paper_tables as tabs
         for name, fn in tabs.TABLES.items():
             _run(records, name, fn, lambda o: f"max_err={o[1]:.4f}",
                  err_of=lambda o: o[1])
 
-    if args.only in ("traffic", "all"):
+    def run_traffic():
         from . import traffic as traf
-
         for case_name, g in traf.traffic_cases():
             out = _run(records, f"traffic[{case_name}]",
                        lambda g=g: traf.traffic_one(g),
@@ -81,9 +100,8 @@ def main(argv=None) -> None:
             records[-1]["patterns"] = out[0]
             records[-1]["summary"] = out[1]
 
-    if args.only in ("routing", "all"):
+    def run_routing():
         from . import routing_bench as rb
-
         for case_name, g in rb.routing_cases():
             out = _run(records, f"routing[{case_name}]",
                        lambda g=g: rb.routing_one(g),
@@ -95,9 +113,8 @@ def main(argv=None) -> None:
             records[-1]["rows"] = out[0]
             records[-1]["worst"] = out[1]
 
-    if args.only in ("sim", "all"):
+    def run_sim():
         from . import sim_bench as sb
-
         for case_name, case in sb.sim_cases():
             out = _run(records, f"sim[{case_name}]",
                        lambda case=case: sb.sim_one(case),
@@ -107,9 +124,8 @@ def main(argv=None) -> None:
                        err_of=lambda o: o[1])
             records[-1]["row"] = out[0]
 
-    if args.only in ("placement", "all"):
+    def run_placement():
         from . import placement_bench as pb
-
         for case_name, g, mesh, axes, d0, exp in pb.placement_cases():
             out = _run(records, f"placement[{case_name}]",
                        lambda g=g, mesh=mesh, axes=axes, d0=d0, exp=exp:
@@ -122,9 +138,27 @@ def main(argv=None) -> None:
             records[-1]["rows"] = out[0]
             records[-1]["summary"] = out[1]
 
-    if args.only in ("figures", "all"):
-        from . import paper_figures as figs
+    def run_faults():
+        from . import fault_bench as fb
+        for case_name, g in fb.fault_cases():
+            for routing in fb.MODELS:
+                out = _run(records, f"faults[{case_name}:{routing}]",
+                           lambda g=g, routing=routing:
+                               fb.fault_one(g, routing),
+                           lambda o: (f"theta_k={','.join(f'{v:.3f}' for v in o[0]['mean_theta'])}"
+                                      f" worst_k5={o[0]['worst_theta'][-1]:.3f}"),
+                           err_of=lambda o: o[1])
+                records[-1]["row"] = out[0]
+        out = _run(records, "faults[sim_parity:torus2d_8x16]",
+                   fb.sim_parity_row,
+                   lambda o: (f"static={o[0]['theta_static']:.4f}"
+                              f" dynamic={o[0]['theta_dynamic']:.4f}"
+                              f" gap={o[0]['knee_gap']:.4f}"),
+                   err_of=lambda o: o[1])
+        records[-1]["row"] = out[0]
 
+    def run_figures():
+        from . import paper_figures as figs
         _run(records, "fig5_mms_vs_moore", figs.fig5,
              lambda o: f"tail_vs_8/9_err={o[1]:.4f}", err_of=lambda o: o[1])
         _run(records, "fig6_mms_utilization", figs.fig6,
@@ -134,6 +168,14 @@ def main(argv=None) -> None:
         _run(records, "fig8_scalability", figs.fig8, lambda o: f"rows={len(o[0])}")
         _run(records, "fig9_pn_vs_slimfly", figs.fig9,
              lambda o: f"demi_pn_worse_than_sf_cases={o[1]:.0f}")
+
+    sections = [("tables", run_tables), ("traffic", run_traffic),
+                ("routing", run_routing), ("sim", run_sim),
+                ("placement", run_placement), ("faults", run_faults),
+                ("figures", run_figures)]
+    for name, body in sections:
+        if args.only in (name, "all"):
+            section(name, body)
 
     if args.only == "all":
         # fabric planner on a real dry-run profile when available
@@ -180,11 +222,14 @@ def main(argv=None) -> None:
             "util_engine": flags().util_engine,
             "total_seconds": round(sum(r["seconds"] for r in records), 6),
             "entries": records,
+            "errors": errors,
         }
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
-        print(f"# wrote {args.json} ({len(records)} entries)")
+        print(f"# wrote {args.json} ({len(records)} entries, "
+              f"{len(errors)} section errors)")
 
+    failed = False
     if args.err_budget >= 0:
         bad = [r for r in records
                if r.get("max_rel_err", 0.0) > args.err_budget]
@@ -192,7 +237,13 @@ def main(argv=None) -> None:
             names = {r["name"]: r["max_rel_err"] for r in bad}
             print(f"# FAIL: max_rel_err over budget {args.err_budget}: "
                   f"{names}", file=sys.stderr)
-            sys.exit(1)
+            failed = True
+    if errors:
+        print(f"# FAIL: {len(errors)} section(s) crashed: "
+              f"{[e['section'] for e in errors]}", file=sys.stderr)
+        failed = True
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

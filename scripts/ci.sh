@@ -25,6 +25,7 @@ BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"         # seconds
 ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}"     # seconds
 PLACEMENT_BUDGET="${CI_PLACEMENT_BUDGET:-300}" # seconds
 SIM_BUDGET="${CI_SIM_BUDGET:-900}"             # seconds
+FAULT_BUDGET="${CI_FAULT_BUDGET:-600}"         # seconds
 
 echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
 timeout "$TIER1_BUDGET" python -m pytest -x -q
@@ -73,5 +74,11 @@ echo "== benchmarks: simulator parity table -> BENCH_5.json (budget ${SIM_BUDGET
 # fluid theta) or band violation (threshold-UGAL outside the
 # [theta_minimal, theta_ugal] bracket) exceeds --err-budget
 timeout "$SIM_BUDGET" python -m benchmarks.run --json BENCH_5.json --only sim
+
+echo "== benchmarks: fault degradation curves -> BENCH_6.json (budget ${FAULT_BUDGET}s) =="
+# benchmarks.run exits nonzero when any degradation curve is not monotone
+# non-increasing in k (relative violation > --err-budget) or the
+# static-vs-dynamic sim fault parity row's knee gap blows the budget
+timeout "$FAULT_BUDGET" python -m benchmarks.run --json BENCH_6.json --only faults
 
 echo "== ci.sh green =="

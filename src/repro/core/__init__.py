@@ -44,6 +44,16 @@ from .adversary import (
     adversarial_table,
     worst_case,
 )
+from .faults import (
+    DegradationSweep,
+    FaultReport,
+    FaultSet,
+    degradation_sweep,
+    degraded_report,
+    fault_report,
+    random_faults,
+    targeted_faults,
+)
 from .registry import TOPOLOGIES, build_topology
 from .routing import (
     ROUTINGS,

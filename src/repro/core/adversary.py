@@ -90,10 +90,29 @@ def _candidate_specs(patterns, n_random: int, seed: int):
     return list(patterns), randoms
 
 
-def _evaluate_specs(g, specs, models, engine, targets_mask):
+def _evaluate_specs(g, specs, models, engine, targets_mask, faults=None):
     """{spec: {model: RoutingResult}} with demand built and normalized
-    once per spec and the minimal/Valiant sweeps shared across models."""
+    once per spec and the minimal/Valiant sweeps shared across models.
+
+    With ``faults`` (a repro.core.faults.FaultSet), demand is still built
+    and normalized on the PRISTINE graph — degraded theta stays in
+    pristine busiest-source units — then restricted to the survivors and
+    evaluated on the degraded graph (repro.core.faults semantics)."""
     active, mask = _active_and_mask(g, targets_mask)
+    if faults is not None and not faults.empty:
+        gd = faults.apply(g)
+        act_d = faults.restrict_active(g, mask)
+        if len(act_d) < 2:
+            raise ValueError("fewer than 2 active vertices survive the "
+                             "faults")
+        out = {}
+        for spec in specs:
+            demand = normalize_demand(make_pattern(spec).demand(g, mask))
+            dem = faults.restrict_demand(g, demand)
+            if dem.sum() <= 0:
+                raise ValueError(f"faults removed every demand of {spec!r}")
+            out[spec] = evaluate_models(gd, dem, act_d, models, engine)
+        return out
     out = {}
     for spec in specs:
         demand = normalize_demand(make_pattern(spec).demand(g, mask))
@@ -104,13 +123,15 @@ def _evaluate_specs(g, specs, models, engine, targets_mask):
 def worst_case(g: Graph, model="minimal",
                patterns=DEFAULT_ADVERSARY_PATTERNS, n_random: int = 8,
                seed: int = 0, engine: str | None = None,
-               targets_mask=None) -> AdversaryReport:
+               targets_mask=None, faults=None) -> AdversaryReport:
     """theta-minimizing pattern for one routing model: the named battery
-    plus ``n_random`` seeded permutations."""
+    plus ``n_random`` seeded permutations.  ``faults`` (a FaultSet)
+    evaluates every candidate on the degraded graph — the worst pattern
+    of a wounded fabric."""
     named, randoms = _candidate_specs(patterns, n_random, seed)
     spec = make_routing(model)  # validate before paying for sweeps
     results = _evaluate_specs(g, named + randoms, [model], engine,
-                              targets_mask)
+                              targets_mask, faults=faults)
     thetas = {s: 1.0 / r[model].max_load for s, r in results.items()}
     alphas = {s: r[model].alpha for s, r in results.items()}
     worst = min(thetas, key=thetas.get)
@@ -122,7 +143,7 @@ def worst_case(g: Graph, model="minimal",
 def adversarial_report(g: Graph, patterns=DEFAULT_ADVERSARY_PATTERNS,
                        models=DEFAULT_MODELS, n_random: int = 8,
                        seed: int = 0, engine: str | None = None,
-                       targets_mask=None):
+                       targets_mask=None, faults=None):
     """One topology's slab of the PolarFly-style table.
 
     Returns ``(rows, worst)`` where ``rows`` is a list of dicts — one per
@@ -132,7 +153,7 @@ def adversarial_report(g: Graph, patterns=DEFAULT_ADVERSARY_PATTERNS,
     its overall min theta across every candidate evaluated."""
     named, randoms = _candidate_specs(patterns, n_random, seed)
     results = _evaluate_specs(g, named + randoms, list(models), engine,
-                              targets_mask)
+                              targets_mask, faults=faults)
 
     rows = []
     for spec in named:
@@ -165,15 +186,18 @@ def adversarial_report(g: Graph, patterns=DEFAULT_ADVERSARY_PATTERNS,
 
 def adversarial_table(cases, patterns=DEFAULT_ADVERSARY_PATTERNS,
                       models=DEFAULT_MODELS, n_random: int = 8,
-                      seed: int = 0, engine: str | None = None):
+                      seed: int = 0, engine: str | None = None,
+                      faults=None):
     """The full adversarial comparison: ``cases`` is an iterable of
     ``(name, graph)`` pairs (see benchmarks.routing_bench for the paper's
     PN/demi-PN/OFT vs torus/dragonfly line-up).  Returns
-    ``{name: {"n": N, "rows": [...], "worst": {model: {...}}}}``."""
+    ``{name: {"n": N, "rows": [...], "worst": {model: {...}}}}``.
+    ``faults`` applies one FaultSet to every case (the table of a shared
+    failure scenario); per-case fault sets belong in separate calls."""
     table = {}
     for name, g in cases:
         rows, worst = adversarial_report(g, patterns=patterns, models=models,
                                          n_random=n_random, seed=seed,
-                                         engine=engine)
+                                         engine=engine, faults=faults)
         table[name] = {"n": g.n, "rows": rows, "worst": worst}
     return table

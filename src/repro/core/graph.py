@@ -75,7 +75,7 @@ class Graph:
         self.indices = dst
         self.arc_src = src
         self.arc_edge_id = eid
-        self._struct_cache: dict = {}
+        self._struct_cache: dict = {"__sig__": self._structure_signature()}
 
     # ---- basic invariants ----
     @property
@@ -97,26 +97,55 @@ class Graph:
     def neighbors(self, v: int) -> np.ndarray:
         return self.indices[self.indptr[v] : self.indptr[v + 1]]
 
+    # ---- cached structure ----
+    # Every piece of derived structure goes through _struct(): one
+    # accessor owns cache construction, and the cache is stamped with a
+    # structure signature so a graph whose edges were mutated in place
+    # (or a shallow copy sharing the parent's cache dict) can never serve
+    # stale bipartition / arc-sort / dense-adjacency arrays.  Derived
+    # graphs (FaultSet.apply, masked route tables) are built through
+    # :meth:`subgraph`, which goes through the constructor and therefore
+    # starts with an empty cache.
+
+    def _structure_signature(self) -> tuple:
+        e = self.edges
+        return (self.n, e.shape[0],
+                int(e[:, 0].sum()) if e.size else 0,
+                int(e[:, 1].sum()) if e.size else 0)
+
+    def _struct(self, key, build):
+        """Central cache accessor: returns ``cache[key]``, building and
+        storing it on first use; drops the whole cache if the edge
+        structure no longer matches the signature it was built for."""
+        sig = self._structure_signature()
+        cache = getattr(self, "_struct_cache", None)
+        if cache is None or cache.get("__sig__") != sig:
+            cache = {"__sig__": sig}
+            self._struct_cache = cache
+        if key not in cache:
+            cache[key] = build()
+        return cache[key]
+
     def adjacency_dense(self, dtype=bool) -> np.ndarray:
         """Dense adjacency, cached per dtype (used by the GEMM engines)."""
-        key = ("adj", np.dtype(dtype).str)
-        a = self._struct_cache.get(key)
-        if a is None:
+
+        def build():
             a = np.zeros((self.n, self.n), dtype=dtype)
             one = True if np.dtype(dtype) == bool else 1
             a[self.edges[:, 0], self.edges[:, 1]] = one
             a[self.edges[:, 1], self.edges[:, 0]] = one
-            self._struct_cache[key] = a
-        return a
+            return a
 
-    # ---- cached structure ----
+        return self._struct(("adj", np.dtype(dtype).str), build)
+
     def bipartition(self) -> np.ndarray | None:
         """2-coloring side[v] in {0,1} if the graph is bipartite, else None.
 
         Works per connected component (BFS parity).  The utilization engine
         uses this to run its GEMMs on the half-size biadjacency blocks.
         """
-        if "bip" not in self._struct_cache:
+
+        def build():
             side = np.full(self.n, -1, dtype=np.int8)
             for start in range(self.n):
                 if side[start] >= 0:
@@ -126,32 +155,67 @@ class Graph:
                 side[comp] = (dist[comp] % 2).astype(np.int8)
             u, v = self.edges[:, 0], self.edges[:, 1]
             ok = bool((side[u] != side[v]).all()) if self.num_edges else True
-            self._struct_cache["bip"] = side if ok else None
-        return self._struct_cache["bip"]
+            return side if ok else None
+
+        return self._struct("bip", build)
 
     def arc_sort_by_pair(self) -> tuple[np.ndarray, np.ndarray]:
         """(order, keys): arc ids sorted by (src, dst) and the sorted packed
         keys src*n + dst — a vectorized arc-id lookup table."""
-        if "pairsort" not in self._struct_cache:
+
+        def build():
             keys = self.arc_src * np.int64(self.n) + self.indices
             order = np.argsort(keys, kind="stable")
-            self._struct_cache["pairsort"] = (order, keys[order])
-        return self._struct_cache["pairsort"]
+            return order, keys[order]
+
+        return self._struct("pairsort", build)
 
     def reverse_arcs(self) -> np.ndarray:
         """rev[k] = arc id of (v -> u) for arc k = (u -> v)."""
-        if "revarc" not in self._struct_cache:
+
+        def build():
             order, keys = self.arc_sort_by_pair()
             qkeys = self.indices * np.int64(self.n) + self.arc_src
-            self._struct_cache["revarc"] = order[np.searchsorted(keys, qkeys)]
-        return self._struct_cache["revarc"]
+            return order[np.searchsorted(keys, qkeys)]
+
+        return self._struct("revarc", build)
 
     def arcs_by_dst(self) -> np.ndarray:
         """Arc ids sorted by destination; group v occupies
         indptr[v]:indptr[v+1] (in-degree equals degree, graph undirected)."""
-        if "dstsort" not in self._struct_cache:
-            self._struct_cache["dstsort"] = np.argsort(self.indices, kind="stable")
-        return self._struct_cache["dstsort"]
+        return self._struct("dstsort",
+                            lambda: np.argsort(self.indices, kind="stable"))
+
+    # ---- derived graphs ----
+    def subgraph(self, edge_mask=None, vertex_mask=None, name: str = "",
+                 meta: dict | None = None) -> "Graph":
+        """Derived graph built through the constructor, so every cache
+        (CSR, bipartition, arc sorts, dense adjacency) is rebuilt from
+        scratch — the only sanctioned way to make degraded/masked copies.
+
+        ``edge_mask`` is an (E,) bool keep-mask over ``self.edges``;
+        ``vertex_mask`` an (N,) bool keep-mask — dropped vertices take
+        their incident edges with them and survivors are relabeled
+        compactly in index order.  ``meta`` is NOT inherited: derived
+        structure rarely keeps the parent's family semantics (orbit
+        generators, torus coordinates), so the caller states what still
+        holds."""
+        e = self.edges
+        keep = (np.ones(e.shape[0], dtype=bool) if edge_mask is None
+                else np.asarray(edge_mask, dtype=bool).copy())
+        if keep.shape != (e.shape[0],):
+            raise ValueError(f"edge_mask is {keep.shape}, graph has "
+                             f"{e.shape[0]} edges")
+        if vertex_mask is None:
+            return Graph(self.n, e[keep], name=name, meta=dict(meta or {}))
+        vm = np.asarray(vertex_mask, dtype=bool)
+        if vm.shape != (self.n,):
+            raise ValueError(f"vertex_mask is {vm.shape}, graph has "
+                             f"N={self.n}")
+        keep &= vm[e[:, 0]] & vm[e[:, 1]]
+        new_id = np.cumsum(vm) - 1
+        return Graph(int(vm.sum()), new_id[e[keep]], name=name,
+                     meta=dict(meta or {}))
 
     # ---- distances ----
     def distances_from(self, source: int) -> np.ndarray:

@@ -334,7 +334,11 @@ _FAMILY_GENS = {
 def automorphism_generators(g: Graph) -> list[np.ndarray] | None:
     """Known automorphism generators for ``g`` (vertex permutations), or
     None when the family has no closed-form group here (turan, dragonfly,
-    random, ad-hoc graphs)."""
+    random, ad-hoc graphs).  Degraded graphs (repro.core.faults) keep
+    their family meta for traffic-pattern semantics but a fault set
+    breaks the symmetry, so they never get the family's generators."""
+    if g.meta.get("faults"):
+        return None
     fn = _FAMILY_GENS.get(g.meta.get("family"))
     return None if fn is None else fn(g)
 

@@ -325,6 +325,7 @@ class SaturationReport:
     total_demand: float
     loads: np.ndarray = field(repr=False)
     alpha: float | None = None  # blend weight on minimal (ugal models)
+    faults: str | None = None   # FaultSet label when evaluated degraded
 
 
 def normalize_demand(demand: np.ndarray) -> np.ndarray:
@@ -342,14 +343,22 @@ _normalize_rows = normalize_demand  # pre-PR 4 private name
 
 def saturation_report(g: Graph, pattern, routing: str = "minimal",
                       engine: str | None = None,
-                      targets_mask: np.ndarray | None = None) -> SaturationReport:
+                      targets_mask: np.ndarray | None = None,
+                      faults=None) -> SaturationReport:
     """Evaluate one traffic pattern on ``g`` under one routing model.
 
     ``pattern`` is a spec for :func:`make_pattern` (a registry name, a
     TrafficPattern, or a raw (N, N) demand matrix); ``routing`` a spec for
     repro.core.routing's :func:`make_routing` ("minimal", "valiant",
     "ugal", "ugal(source)", or a RoutingModel); ``targets_mask`` defaults
-    to the graph's leaf mask for indirect networks."""
+    to the graph's leaf mask for indirect networks.  With ``faults`` (a
+    repro.core.faults.FaultSet) the pattern is built and normalized on the
+    pristine graph, restricted to the survivors, and evaluated on the
+    degraded graph — see :func:`repro.core.faults.degraded_report`."""
+    if faults is not None and not faults.empty:
+        from .faults import degraded_report
+        return degraded_report(g, pattern, faults, routing=routing,
+                               engine=engine, targets_mask=targets_mask)
     model = make_routing(routing)
     pat = make_pattern(pattern)
     if targets_mask is None:

@@ -215,7 +215,7 @@ def chip_wire_bytes(profile, mesh_shape, axis_names, axis_of=None) -> float:
 
 
 def placement_report(placement: Placement, profile, routing="ugal",
-                     engine: str | None = None, axis_of=None):
+                     engine: str | None = None, axis_of=None, faults=None):
     """Saturation analysis of one (profile, placement) pair under one
     routing model, as a repro.core.traffic ``SaturationReport``.
 
@@ -227,7 +227,13 @@ def placement_report(placement: Placement, profile, routing="ugal",
     (Row normalization would rescale each layout by its own peak router
     and erase exactly the locality differences placement search is
     after.)  Raises ValueError when every byte stays router-local (the
-    fabric is idle — theta is unbounded)."""
+    fabric is idle — theta is unbounded).
+
+    ``faults`` (a repro.core.faults.FaultSet) evaluates the same
+    per-chip-normalized demand on the degraded fabric — the pristine
+    busiest-chip unit is kept, so degraded placement theta is directly
+    comparable to pristine.  A fault that kills an occupied router drops
+    that router's demand with it (the job has lost those chips)."""
     from ..core.traffic import SaturationReport
     g = placement.graph
     demand = placement_demand(profile, placement, axis_of)
@@ -237,15 +243,27 @@ def placement_report(placement: Placement, profile, routing="ugal",
         raise ValueError("placement demand is all router-local "
                          "(theta unbounded); nothing to route")
     norm = demand / per_chip
+    label = None
+    if faults is not None and not faults.empty:
+        label = faults.label
+        norm = faults.restrict_demand(g, norm)
+        if not norm.any():
+            raise ValueError("faults removed every inter-router byte of "
+                             "the placement")
+        active = faults.restrict_active(g, None)
+        g = faults.apply(g)
+    else:
+        active = np.arange(g.n)
     model = make_routing(routing)
-    res = model.evaluate(g, norm, np.arange(g.n), engine)
+    res = model.evaluate(g, norm, active, engine)
     mx = float(res.loads.max())
     mean = float(res.loads.mean())
     return SaturationReport(
         pattern=f"placement({'x'.join(map(str, placement.mesh_shape))})",
         routing=model.name, theta=1.0 / mx, u=mean / mx, max_load=mx,
         mean_load=mean, kbar_eff=res.kbar_eff, diameter=int(res.diameter),
-        total_demand=float(norm.sum()), loads=res.loads, alpha=res.alpha)
+        total_demand=float(norm.sum()), loads=res.loads, alpha=res.alpha,
+        faults=label)
 
 
 def link_loads(p: Placement, traffic, routing="minimal",

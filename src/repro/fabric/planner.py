@@ -152,7 +152,9 @@ PLACEMENT_MAX_N = 2048
 
 def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64,
          mesh_shape=None, axis_names=("model", "data"),
-         placement_strategy="group", routing="ugal", seed: int = 0):
+         placement_strategy="group", routing="ugal", seed: int = 0,
+         resilience_k: int = 0, resilience_trials: int = 4,
+         resilience_seed: int = 0):
     """Rank fabrics by step-communication time and report $/W; returns list
     of dict rows sorted by comm time.
 
@@ -162,7 +164,17 @@ def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64,
     demand matrix routed under ``routing``, and ``placed_comm_ms`` (the
     busiest-link step time) drives the ranking — per-step collective time
     under the congestion the actual schedule causes, not the uniform
-    closed form."""
+    closed form.
+
+    With ``resilience_k > 0``, each candidate with at most
+    ``PLACEMENT_MAX_N`` routers also gets a graceful-degradation score:
+    ``resilience_theta`` is the WORST uniform-traffic theta over
+    ``resilience_trials`` seeded draws of ``resilience_k`` link failures
+    (connectivity-preserving, routed under ``routing``), and
+    ``resilience_frac`` that worst theta as a fraction of the pristine
+    value — how much of the fabric's throughput guarantee survives the
+    failure scenario.  Ranking stays by comm time; resilience is a
+    reported trade-off column."""
     rows = []
     for cand in candidate_fabrics(min_terminals, max_radix):
         t = cand.step_comm_seconds(profile)
@@ -177,6 +189,16 @@ def plan(profile: StepProfile, min_terminals: int, max_radix: int = 64,
             "usd_per_node": round(cand.dollars_per_node, 2),
             "watts_per_node": round(cand.watts_per_node, 2),
         }
+        if resilience_k > 0 and cand.fabric.graph.n <= PLACEMENT_MAX_N:
+            from ..core.faults import degradation_sweep
+            sweep = degradation_sweep(
+                cand.fabric.graph, k_failures=(int(resilience_k),),
+                trials=resilience_trials, pattern="uniform",
+                routing=routing, kind="links", seed=resilience_seed)
+            worst = float(sweep.worst[0])
+            row["resilience_k"] = int(resilience_k)
+            row["resilience_theta"] = round(worst, 4)
+            row["resilience_frac"] = round(worst / sweep.pristine_theta, 4)
         if mesh_shape is not None:
             n_chips = int(np.prod(mesh_shape))
             g = cand.fabric.graph

@@ -45,12 +45,13 @@ from ..core.graph import Graph
 from ..core.traffic import make_pattern, normalize_demand, saturation_report
 from .engine import (SIM_JAX_MIN_WORK, SimConfig, SimState, init_state,
                      make_step, parse_sim_routing, pick_backend)
+from .faults import FaultEvent, apply_fault_surgery, normalize_events
 from .tables import RouteTables, build_tables
 
 __all__ = [
     "SimConfig", "SimRun", "SimSweep", "Simulator", "simulate",
     "saturation_sweep", "simulate_placement", "fluid_routing_spec",
-    "DEFAULT_LOAD_GRID", "SIM_MAX_CELLS",
+    "FaultEvent", "DEFAULT_LOAD_GRID", "SIM_MAX_CELLS",
 ]
 
 # offered-load grid of a sweep, as fractions of the analytic fluid theta:
@@ -101,6 +102,8 @@ class SimRun:
     steps: int
     window: int
     backend: str
+    dropped: float = 0.0         # fluid lost to fault surgery (cumulative)
+    faults: str | None = None    # final fault state's label, if any
     history: dict = field(repr=False, default_factory=dict)
 
 
@@ -162,6 +165,22 @@ class Simulator:
         self.dtype = np.float64
         self.tables = build_tables(g, self.active, dtype=self.dtype)
         self._step = make_step(self.tables, config, self.backend, self.dtype)
+        # fault-state label -> (tables, compiled step); one compile per
+        # distinct fault state serves every run and every load probe
+        self._fault_cache: dict = {}
+
+    def _tables_for(self, fs):
+        """Route tables + step function for one fault state (None or an
+        empty FaultSet = the pristine pair)."""
+        if fs is None or fs.empty:
+            return self.tables, self._step
+        key = fs.label
+        if key not in self._fault_cache:
+            tb = build_tables(self.g, self.active, dtype=self.dtype,
+                              faults=fs)
+            self._fault_cache[key] = (
+                tb, make_step(tb, self.config, self.backend, self.dtype))
+        return self._fault_cache[key]
 
     def default_steps(self) -> int:
         """Enough steps for the slowest feedback loop to settle: several
@@ -170,11 +189,25 @@ class Simulator:
         return 48 + 16 * 2 * dmax
 
     def run(self, demand: np.ndarray, offered: float,
-            steps: int | None = None, window: int | None = None) -> SimRun:
+            steps: int | None = None, window: int | None = None,
+            events=None) -> SimRun:
         """Open-loop run: every source offers ``offered * demand[s, :]``
         per step; measurements average the trailing ``window`` steps.
         ``demand`` is a dense (N, N) matrix in the caller's normalization
-        (diagonal and inactive columns must be zero)."""
+        (diagonal and inactive columns must be zero).
+
+        ``events`` is a fault schedule — FaultEvents or ``(step,
+        FaultSet)`` pairs, each the CUMULATIVE fault state from that step
+        on (recovery = a later event with fewer faults).  At each
+        boundary the run swaps in tables compiled for the new fault state
+        and passes the live fluid through
+        :func:`repro.sim.faults.apply_fault_surgery`; sources stop being
+        offered fluid toward unroutable dests for the duration.  theta is
+        measured against the FINAL fault state's surviving demand, so a
+        static fault (one event at step 0) is directly comparable to the
+        analytic ``degraded_report`` theta.  Mind the window: trailing
+        measurements should sit after the last event to read steady
+        state."""
         t = self.tables
         demand = np.asarray(demand, dtype=np.float64)
         if demand.shape != (t.n, t.n):
@@ -194,20 +227,46 @@ class Simulator:
         window = max(steps // 3, 8) if window is None else int(window)
         window = min(window, steps)
 
+        evs = normalize_events(events)
+        if evs and evs[-1].step >= steps:
+            raise ValueError(f"fault event at step {evs[-1].step} is past "
+                             f"the run's {steps} steps")
+        # segments of constant fault state: (start, end, FaultSet | None)
+        marks = ([] if evs and evs[0].step == 0 else [(0, None)])
+        marks += [(e.step, e.faults) for e in evs]
+        segs = [(s0, (marks[i + 1][0] if i + 1 < len(marks) else steps), fs)
+                for i, (s0, fs) in enumerate(marks)]
+
         inj = (offered * inj_norm).astype(self.dtype)
-        inj_cap = (self.config.inj_factor * offered
-                   * inj_norm.sum(axis=1)).astype(self.dtype)
         # host numpy in, host numpy out: the jax step converts on entry
         # (under its enable_x64 scope, so float64 survives the round trip)
         st = init_state(t, self.dtype).as_tuple()
         hist = np.empty((steps, 6), dtype=np.float64)
-        for i in range(steps):
-            st, stats = self._step(st, inj, inj_cap)
-            hist[i] = np.asarray(stats, dtype=np.float64)
+        dropped_total = 0.0
+        tb = t
+        for s0, s1, fs in segs:
+            tb, step_fn = self._tables_for(fs)
+            if fs is not None:
+                st, dropped = apply_fault_surgery(st, tb)
+                dropped_total += dropped
+            inj_seg = (inj * tb.routable).astype(self.dtype) \
+                if tb.faulted else inj
+            inj_cap = (self.config.inj_factor
+                       * inj_seg.sum(axis=1)).astype(self.dtype)
+            for i in range(s0, s1):
+                st, stats = step_fn(st, inj_seg, inj_cap)
+                hist[i] = np.asarray(stats, dtype=np.float64)
+            if fs is not None:
+                st = tuple(np.asarray(a) for a in st)
         # final fluid state, host-side (tests probe buffer occupancies)
         self.last_state = SimState(*(np.asarray(a) for a in st))
 
-        total = float(inj_norm.sum())
+        # theta in the FINAL fault state's surviving demand units — the
+        # value the analytic degraded_report theta is comparable to
+        total = float((inj_norm * tb.routable).sum() if tb.faulted
+                      else inj_norm.sum())
+        if total <= 0:
+            raise ValueError("faults removed every offered demand")
         w = hist[-window:]
         delivered_rate = float(w[:, 0].mean())
         accepted_rate = float(w[:, 1].mean())
@@ -216,21 +275,28 @@ class Simulator:
         injected_cum = float(hist[:, 2].sum())
         delivered_cum = float(hist[:, 0].sum())
         residual = abs(injected_cum - delivered_cum - float(hist[-1, 3])
-                       - src_backlog) / max(injected_cum, 1e-30)
+                       - src_backlog - dropped_total) \
+            / max(injected_cum, 1e-30)
         acc_cum = float(hist[:, 1].sum())
         alpha = 1.0 - float(hist[:, 5].sum()) / max(acc_cum, 1e-30)
         latency = occupancy / max(delivered_rate, 1e-30)
+        final_fs = segs[-1][2]
         return SimRun(
             routing=self.config.routing, offered=float(offered),
             theta=delivered_rate / total, delivered_rate=delivered_rate,
             accepted_rate=accepted_rate, latency=latency, alpha=alpha,
             occupancy=occupancy, src_backlog=src_backlog, residual=residual,
             steps=steps, window=window, backend=self.backend,
+            dropped=dropped_total,
+            faults=(None if final_fs is None or final_fs.empty
+                    else final_fs.label),
             history={"delivered": hist[:, 0] / total,
                      "accepted": hist[:, 1] / total,
                      "offered": hist[:, 2] / total,
                      "occupancy": hist[:, 3], "src_backlog": hist[:, 4],
-                     "diverted": hist[:, 5]})
+                     "diverted": hist[:, 5],
+                     "fault_events": np.array([e.step for e in evs],
+                                              dtype=np.int64)})
 
 
 def _demand_for(g: Graph, pattern, targets_mask, normalize: bool):
@@ -247,17 +313,19 @@ def simulate(g: Graph, pattern, routing: str = "minimal",
              offered: float = 0.5, steps: int | None = None,
              config: SimConfig | None = None,
              targets_mask: np.ndarray | None = None,
-             normalize: bool = True) -> SimRun:
+             normalize: bool = True, events=None) -> SimRun:
     """Simulate one (pattern, routing, offered load) point.
 
     ``pattern`` is any repro.core.traffic spec (registry name,
     TrafficPattern, or raw (N, N) matrix); ``offered`` is the injection
     rate of the busiest source in link-equivalents (the analytic theta's
     units).  ``config`` overrides buffers/backend; its routing field is
-    superseded by ``routing``."""
+    superseded by ``routing``.  ``events`` is a mid-run fault schedule
+    (see :meth:`Simulator.run`)."""
     cfg = _config_with(config, routing)
     _, demand, targets_mask = _demand_for(g, pattern, targets_mask, normalize)
-    return Simulator(g, cfg, targets_mask).run(demand, offered, steps)
+    return Simulator(g, cfg, targets_mask).run(demand, offered, steps,
+                                               events=events)
 
 
 def _config_with(config: SimConfig | None, routing: str) -> SimConfig:
@@ -273,7 +341,8 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
                      config: SimConfig | None = None,
                      targets_mask: np.ndarray | None = None,
                      refine: int = 3, stable_ratio: float = 0.98,
-                     theta_analytic: float | None = None) -> SimSweep:
+                     theta_analytic: float | None = None,
+                     events=None) -> SimSweep:
     """Latency-vs-offered-load curve and measured saturation throughput
     for one (topology, pattern, routing).
 
@@ -285,7 +354,11 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
     stays >= ``stable_ratio``, sharpened by ``refine`` bisection probes
     inside the (stable, unstable) bracket.  Pass ``theta_analytic`` to
     reuse an already-computed fluid reference (skips one analytic
-    solve)."""
+    solve).  ``events`` applies one fault schedule to EVERY probe (see
+    :meth:`Simulator.run`) — the measured knee is then the degraded
+    saturation throughput, comparable to the analytic
+    ``degraded_report`` theta of the final fault state; pass a ``loads``
+    grid scaled to the expected degraded theta so the bracket lands."""
     cfg = _config_with(config, routing)
     pat, demand, targets_mask = _demand_for(g, pattern, targets_mask, True)
     ref = (theta_analytic if theta_analytic is not None else
@@ -295,7 +368,7 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
         loads = np.asarray(DEFAULT_LOAD_GRID) * ref
     loads = np.sort(np.asarray(loads, dtype=np.float64))
     simr = Simulator(g, cfg, targets_mask)
-    grid = [simr.run(demand, lam, steps) for lam in loads]
+    grid = [simr.run(demand, lam, steps, events=events) for lam in loads]
     runs = list(grid)
 
     def stable(r):
@@ -306,12 +379,12 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
         if any(stable(r) for r in runs):
             break
         runs.append(simr.run(demand, 0.5 * min(r.offered for r in runs),
-                             steps))
+                             steps, events=events))
     for _ in range(2):
         if any(not stable(r) for r in runs):
             break
         runs.append(simr.run(demand, 1.4 * max(r.offered for r in runs),
-                             steps))
+                             steps, events=events))
 
     lo = max((r.offered for r in runs if stable(r)), default=0.0)
     unstable = [r.offered for r in runs if not stable(r) and r.offered > lo]
@@ -319,7 +392,7 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
     if lo > 0.0 and np.isfinite(hi):
         for _ in range(refine):
             mid = 0.5 * (lo + hi)
-            r = simr.run(demand, mid, steps)
+            r = simr.run(demand, mid, steps, events=events)
             runs.append(r)
             if stable(r):
                 lo = mid

@@ -205,6 +205,10 @@ def make_step(t: RouteTables, cfg: SimConfig, backend: str, dtype):
     in_active = np.zeros(t.n, dtype=bool)
     in_active[t.active] = True
     n_mids = asd(t.m - in_active)
+    # faulted tables break the uniform-spread structure the cheap pend
+    # expansion below hard-codes; fall back to the general contraction
+    faulted = bool(getattr(t, "faulted", False))
+    spread_T = asd(t.spread.T)               # (M, N), mids x routers
     mode, thr = cfg.mode, cfg.threshold
     cap = dtype(cfg.capacity)
     buf = dtype(min(cfg.buffer, _BIG))
@@ -308,9 +312,14 @@ def make_step(t: RouteTables, cfg: SimConfig, backend: str, dtype):
             # commit (mid, dest) pairs with the SAME per-row spread the
             # vc1 fluid routes by: (r, d) fluid puts spread[r, m] on mid
             # m, i.e. pend += spread.T @ div_eff, expanded to O(N * M)
-            # via spread[r, m] = (1 - [active[m] == r]) / n_mids[r]
-            scaled = div_eff / n_mids[:, None]
-            pend = pend + scaled.sum(0)[None, :] - scaled[active, :]
+            # via spread[r, m] = (1 - [active[m] == r]) / n_mids[r];
+            # faulted spreads are not uniform, so take the O(N * M^2)
+            # contraction literally there
+            if faulted:
+                pend = pend + spread_T @ div_eff
+            else:
+                scaled = div_eff / n_mids[:, None]
+                pend = pend + scaled.sum(0)[None, :] - scaled[active, :]
 
         keep = cand - div_eff
         keep_frac = keep / xp.maximum(cand, _TINY)

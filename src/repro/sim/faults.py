@@ -1,0 +1,129 @@
+"""Mid-run fault events for the flow-level simulator.
+
+A live fabric does not fail at t=0: links and routers die (and come
+back) while fluid is in flight.  ``Simulator.run(events=...)`` takes a
+schedule of :class:`FaultEvent`\\ s; at each event boundary the run
+switches to route tables compiled for the event's fault state
+(``build_tables(faults=...)`` — masked splits ARE the reroute, since all
+transit fluid re-splits per hop) and passes the live state through
+:func:`apply_fault_surgery`:
+
+  * fluid whose (router, dest) pair is no longer routable — the dest
+    died, or the faults cut the router off from it — is DROPPED and
+    accounted (``SimRun.dropped``; the conservation residual includes
+    it);
+  * fluid queued in a dead out-slot is requeued through the new minimal
+    split of its router (in-flight requeue, conserving);
+  * the Valiant pending pool loses its dead (mid, dest) columns, and the
+    matching fraction of vc1/stage2 fluid is dropped with it — the
+    per-mid invariant ``pend row mass == vc1-toward-mid + stage2`` that
+    conversion mixing relies on survives the surgery;
+  * source backlog toward unroutable dests is dropped (those sources
+    also stop being offered fluid for the duration — see
+    ``Simulator.run``).
+
+Each event's ``faults`` is the CUMULATIVE fault state from that step on
+(not a delta); recovery is a later event with a smaller — or empty —
+FaultSet.  See docs/faults.md for the event model and the
+static-vs-dynamic parity conditions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.faults import FaultSet
+from .tables import RouteTables
+
+__all__ = ["FaultEvent", "normalize_events", "apply_fault_surgery"]
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """``faults`` is the full fault state of the fabric from ``step`` on."""
+
+    step: int
+    faults: FaultSet
+
+    def __post_init__(self):
+        if int(self.step) != self.step or self.step < 0:
+            raise ValueError(f"event step must be a nonnegative int, "
+                             f"got {self.step!r}")
+        object.__setattr__(self, "step", int(self.step))
+        if not isinstance(self.faults, FaultSet):
+            raise TypeError(f"event faults must be a FaultSet, "
+                            f"got {type(self.faults).__name__}")
+
+
+def normalize_events(events) -> tuple:
+    """Sorted tuple of FaultEvents from an iterable of FaultEvents or
+    ``(step, FaultSet)`` pairs; duplicate steps are rejected (each step
+    has ONE fault state — merge upstream)."""
+    if events is None:
+        return ()
+    evs = []
+    for e in events:
+        if isinstance(e, FaultEvent):
+            evs.append(e)
+        else:
+            step, fs = e
+            evs.append(FaultEvent(step=step, faults=fs))
+    evs.sort(key=lambda e: e.step)
+    steps = [e.step for e in evs]
+    if len(set(steps)) != len(steps):
+        raise ValueError(f"duplicate fault-event steps in {steps}")
+    return tuple(evs)
+
+
+def apply_fault_surgery(state: tuple, t: RouteTables) -> tuple[tuple, float]:
+    """Reconcile live fluid state with new route tables ``t``.
+
+    ``state`` is the step tuple ``(q0, q1, q2, src, pend, stage2)`` (any
+    backend; converted to host numpy).  Returns ``(new_state, dropped)``
+    where ``dropped`` is the total fluid mass removed — unroutable queue
+    fluid, source backlog toward dead dests, and the vc1/stage2 fraction
+    matched to dead pending columns.  Requeue of fluid from dead
+    out-slots conserves mass exactly (the new split rows sum to 1 on
+    every surviving routable pair).  Idempotent: a second pass against
+    the same tables drops nothing."""
+    q0, q1, q2, src, pend, stage2 = \
+        [np.asarray(a, dtype=np.float64).copy() for a in state]
+    routable = np.asarray(t.routable, dtype=bool)
+    slot_ok = np.asarray(t.slot_ok, dtype=bool)
+    split = np.asarray(t.split, dtype=np.float64)
+    dropped = 0.0
+
+    # 1. pending-pool columns: pend[mid, dest] survives iff dest is still
+    # routable FROM the mid; vc1 fluid and stage2 credit shrink by the
+    # same per-mid fraction, keeping conversion mixing consistent
+    keep_pend = routable[t.active, :]                 # (M, M)
+    row_tot = pend.sum(axis=1)
+    pend *= keep_pend
+    frac = np.where(row_tot > 0,
+                    pend.sum(axis=1) / np.maximum(row_tot, 1e-300), 1.0)
+    before = q1.sum() + stage2.sum()
+    q1 *= frac[None, None, :]                         # q1 dest axis = mid
+    stage2 *= frac
+    dropped += before - (q1.sum() + stage2.sum())
+
+    # 2. unroutable (router, dest) fluid is lost with the fault
+    for q in (q0, q1, q2):
+        before = q.sum()
+        q *= routable[:, None, :]
+        dropped += before - q.sum()
+
+    # 3. fluid in dead out-slots requeues through the new minimal split
+    dead = ~slot_ok
+    for q in (q0, q1, q2):
+        moved = (q * dead[:, :, None]).sum(axis=1)    # (N, M)
+        q *= slot_ok[:, :, None]
+        q += moved[:, None, :] * split
+
+    # 4. backlog toward unroutable dests goes home (is dropped)
+    before = src.sum()
+    src *= routable
+    dropped += before - src.sum()
+
+    return (q0, q1, q2, src, pend, stage2), float(dropped)

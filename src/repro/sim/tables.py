@@ -39,6 +39,11 @@ class RouteTables:
     """Topology-dependent constants of one simulator instance.
 
     Shapes: N routers, K = max degree (padded out-slots), M active dests.
+
+    The fault-mask block describes the degraded fabric the tables were
+    compiled for (``build_tables(faults=...)``); on pristine tables every
+    mask is all-alive and ``faulted`` is False, so the step function can
+    keep its cheap pristine code paths.
     """
 
     n: int
@@ -51,54 +56,110 @@ class RouteTables:
     spread: np.ndarray = field(repr=False)     # (N, M) Valiant intermediates
     dist_act: np.ndarray = field(repr=False)   # (N, M) hops to each dest
     hval_rem: np.ndarray = field(repr=False)   # (N, M) mean two-leg estimate
+    slot_ok: np.ndarray = field(repr=False, default=None)    # (N, K) bool
+    router_ok: np.ndarray = field(repr=False, default=None)  # (N,) bool
+    dest_ok: np.ndarray = field(repr=False, default=None)    # (M,) bool
+    routable: np.ndarray = field(repr=False, default=None)   # (N, M) bool
+    faulted: bool = False
 
 
-def build_tables(g: Graph, active: np.ndarray,
-                 dtype=np.float64) -> RouteTables:
+def build_tables(g: Graph, active: np.ndarray, dtype=np.float64,
+                 faults=None) -> RouteTables:
     """Compile the dense routing tables for ``g`` restricted to ``active``
     destinations.  One batched all-source BFS plus O(N * K * M) table
-    fills; the result is reused across every run on the same instance."""
+    fills; the result is reused across every run on the same instance.
+
+    With ``faults`` (a repro.core.faults.FaultSet) the tables are compiled
+    for the degraded fabric while KEEPING the pristine ``(N, K)`` state
+    layout — dead routers and dead out-slots stay addressable (so fluid
+    state carries across a mid-run fault event) but are masked out of
+    every split/spread and flagged in ``slot_ok``/``routable``.  Distances
+    and ECMP splits are recomputed on the surviving graph: per-hop ECMP
+    through masked split tables IS the reroute.  Because split only ever
+    sends fluid one hop closer on the alive graph, ``routable[r, d]``
+    (same alive component) is invariant along every route — masked tables
+    plus one state surgery (repro.sim.faults) keep fluid conserved."""
     active = np.asarray(active, dtype=np.int64)
     n, m = g.n, len(active)
     if m < 2:
         raise ValueError("need at least 2 active vertices")
     deg = g.degrees
     k = int(deg.max())
+    sent = np.iinfo(np.int32).max // 2   # unreachable / padded-slot marker
 
-    dist = bfs_distances_batched(g, np.arange(n)).astype(np.int32)
-    if (dist < 0).any():
-        raise ValueError("graph is disconnected")
+    faulted = faults is not None and not faults.empty
+    if faulted:
+        edge_alive = faults.edge_alive(g)
+        router_ok = faults.router_mask(g)
+        dist = bfs_distances_batched(g.subgraph(edge_mask=edge_alive),
+                                     np.arange(n)).astype(np.int32)
+        dist[dist < 0] = sent
+    else:
+        edge_alive = np.ones(g.num_edges, dtype=bool)
+        router_ok = np.ones(n, dtype=bool)
+        dist = bfs_distances_batched(g, np.arange(n)).astype(np.int32)
+        if (dist < 0).any():
+            raise ValueError("graph is disconnected")
 
     head = np.full((n, k), n, dtype=np.int64)
+    slot_ok = np.zeros((n, k), dtype=bool)
+    arc_ok = edge_alive[g.arc_edge_id]
     for r in range(n):
         d = int(deg[r])
         head[r, :d] = g.indices[g.indptr[r]: g.indptr[r + 1]]
+        slot_ok[r, :d] = arc_ok[g.indptr[r]: g.indptr[r + 1]]
 
-    # dist from each slot's head router to each active dest; padded slots
-    # get an unreachable sentinel so they never look like a next hop
-    dist_pad = np.vstack([dist, np.full((1, n), np.iinfo(np.int32).max // 2,
-                                        dtype=np.int32)])
+    dest_ok = router_ok[active]
     dist_act = dist[:, active]                        # (N, M)
+    routable = (router_ok[:, None] & dest_ok[None, :]
+                & (dist_act < sent))
+    if faulted:
+        if int(dest_ok.sum()) < 2:
+            raise ValueError("fewer than 2 active destinations survive "
+                             "the faults")
+        alive_ids = np.nonzero(dest_ok)[0]
+        if not routable[np.ix_(active[dest_ok], alive_ids)].all():
+            raise ValueError(
+                "faults disconnect the active set: surviving active "
+                "vertices are not mutually reachable")
+
+    # dist from each slot's head router to each active dest; padded and
+    # dead slots get an unreachable sentinel so they never look like a
+    # next hop
+    dist_pad = np.vstack([dist, np.full((1, n), sent, dtype=np.int32)])
     head_dist = dist_pad[head][:, :, active]          # (N, K, M)
-    min_mask = head_dist == (dist_act[:, None, :] - 1)
+    min_mask = (head_dist == (dist_act[:, None, :] - 1)) \
+        & slot_ok[:, :, None]
     count = min_mask.sum(axis=1)                      # (N, M)
     split = (min_mask / np.maximum(count, 1)[:, None, :]).astype(dtype)
 
     deliver = head[:, :, None] == active[None, None, :]
-    # Valiant intermediate spread: uniform over active mids other than the
-    # diverting router itself (rows of routers outside the active set use
-    # all m mids), normalized per row so diversion conserves fluid
+    # Valiant intermediate spread: uniform over the surviving active mids
+    # this router can reach, other than itself (rows of routers outside
+    # the active set use all reachable mids), normalized per row so
+    # diversion conserves fluid
     not_self = active[None, :] != np.arange(n)[:, None]
-    spread = (not_self / not_self.sum(axis=1, keepdims=True)).astype(dtype)
+    ok_mid = not_self & routable
+    spread = (ok_mid / np.maximum(ok_mid.sum(axis=1, keepdims=True), 1)
+              ).astype(dtype)
 
     # remaining-hop estimates for the per-hop UGAL rule: minimal is the
     # true distance; the Valiant detour from r to d is estimated as the
-    # mean over intermediates of dist(r, m) + dist(m, d)
-    mean_to_mid = dist[:, active].mean(axis=1)        # (N,)
-    mean_from_mid = dist[np.ix_(active, active)].mean(axis=0)  # (M,)
+    # mean over surviving intermediates of dist(r, m) + dist(m, d)
+    alive_act = active[dest_ok]
+    mean_to_mid = dist[:, alive_act].mean(axis=1)     # (N,)
+    mean_from_mid = dist[np.ix_(alive_act, active)].mean(axis=0)  # (M,)
     hval_rem = (mean_to_mid[:, None] + mean_from_mid[None, :]).astype(dtype)
+    dist_out = dist_act.astype(dtype)
+    if faulted:
+        # zero the sentinel entries: unroutable pairs never carry fluid,
+        # and downstream consumers (default_steps, the UGAL inequality)
+        # must not see the unreachable marker as a distance
+        dist_out = np.where(routable, dist_out, 0.0).astype(dtype)
+        hval_rem = np.where(routable, hval_rem, 0.0).astype(dtype)
 
     return RouteTables(
         n=n, k=k, m=m, active=active, head=head, split=split,
-        deliver=deliver, spread=spread, dist_act=dist_act.astype(dtype),
-        hval_rem=hval_rem)
+        deliver=deliver, spread=spread, dist_act=dist_out,
+        hval_rem=hval_rem, slot_ok=slot_ok, router_ok=router_ok,
+        dest_ok=dest_ok, routable=routable, faulted=faulted)

@@ -1,0 +1,153 @@
+"""repro.train.elastic: submesh recovery after node loss, survivor
+remeshing, and state resharding (shrink-grow round-trips).
+
+The contract (elastic.py): the model axis NEVER changes size (weights
+are sharded by it); pods then data absorb the loss.  The multi-device
+round-trip runs in a subprocess so the host platform can be forced to 8
+devices without leaking XLA_FLAGS into this process (the
+test_system idiom)."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.train.elastic import (largest_submesh_shape, remesh,
+                                 reshard_state)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# largest_submesh_shape: pure shape arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_submesh_full_survivor_set():
+    assert largest_submesh_shape(16, 4) == (2, 2, 4)
+    assert largest_submesh_shape(512, 16) == (2, 16, 16)
+
+
+def test_submesh_data_axis_absorbs_partial_loss():
+    # 16 -> 11 devices: still 2 pods, data shrinks 2 -> 1 (8 used)
+    assert largest_submesh_shape(11, 4) == (2, 1, 4)
+    assert largest_submesh_shape(15, 4) == (2, 1, 4)
+
+
+def test_submesh_pod_axis_collapses_before_model():
+    # under one pod's worth of survivors: 2-tuple, no pod axis
+    assert largest_submesh_shape(7, 4) == (1, 4)
+    assert largest_submesh_shape(4, 4) == (1, 4)
+
+
+def test_submesh_prefer_pods():
+    assert largest_submesh_shape(24, 4, prefer_pods=3) == (3, 2, 4)
+    assert largest_submesh_shape(24, 4, prefer_pods=1) == (6, 4)
+
+
+def test_submesh_model_axis_is_inviolable():
+    with pytest.raises(ValueError, match="cannot keep model axis"):
+        largest_submesh_shape(3, 4)
+
+
+def test_submesh_monotone_under_loss():
+    """Shrinking the survivor set never grows the mesh, and the model
+    axis stays fixed — the elasticity invariant, swept."""
+    model = 4
+    prev = None
+    for n in range(64, model - 1, -1):
+        shape = largest_submesh_shape(n, model)
+        assert shape[-1] == model
+        used = int(np.prod(shape))
+        assert used <= n
+        if prev is not None:
+            assert used <= prev
+        prev = used
+
+
+# ---------------------------------------------------------------------------
+# remesh / reshard_state on the host platform
+# ---------------------------------------------------------------------------
+
+
+def test_remesh_single_device():
+    jax = pytest.importorskip("jax")
+    mesh = remesh(jax.devices(), model_axis=1)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape == {"data": len(jax.devices()), "model": 1} \
+        or mesh.shape["model"] == 1
+
+
+def test_reshard_state_roundtrip_single_device():
+    jax = pytest.importorskip("jax")
+    from jax.sharding import PartitionSpec as P
+    mesh = remesh(jax.devices()[:1], model_axis=1)
+    state = {"w": np.arange(12.0).reshape(3, 4), "b": np.ones(4)}
+    specs = {"w": P(), "b": P()}
+    out = reshard_state(state, mesh, specs)
+    np.testing.assert_array_equal(np.asarray(out["w"]), state["w"])
+    np.testing.assert_array_equal(np.asarray(out["b"]), state["b"])
+
+
+SHRINK_GROW = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.train.elastic import (largest_submesh_shape, remesh,
+                                     reshard_state)
+
+    devices = jax.devices()
+    assert len(devices) == 8
+    MODEL = 2
+    state = {"w": np.arange(64.0).reshape(8, 8), "step": np.float64(7.0)}
+    specs = {"w": P("model", None), "step": P()}
+
+    # full fleet: (2, 2, 2)
+    full = remesh(devices, MODEL)
+    assert full.axis_names == ("pod", "data", "model")
+    st = reshard_state(state, full, specs)
+
+    # two nodes die -> 6 survivors -> (2, 1, 2), data absorbed the loss
+    survivors = devices[:6]
+    shrunk_shape = largest_submesh_shape(len(survivors), MODEL)
+    shrunk = remesh(survivors, MODEL)
+    st = reshard_state({k: np.asarray(v) for k, v in st.items()},
+                       shrunk, specs)
+
+    # nodes return -> full mesh again; values survive the round trip
+    grown = remesh(devices, MODEL)
+    st = reshard_state({k: np.asarray(v) for k, v in st.items()},
+                       grown, specs)
+    ok_w = bool(np.array_equal(np.asarray(st["w"]), state["w"]))
+    ok_s = float(np.asarray(st["step"])) == 7.0
+    n_shards = len(st["w"].sharding.device_set)
+    print(json.dumps({"shrunk_shape": list(shrunk_shape),
+                      "shrunk_ndev": int(shrunk.devices.size),
+                      "grown_ndev": int(grown.devices.size),
+                      "roundtrip_w": ok_w, "roundtrip_step": ok_s,
+                      "w_shards": n_shards}))
+""")
+
+
+def test_shrink_grow_roundtrip_multidevice():
+    """8 -> 6 -> 8 host devices: the mesh shrinks along pods/data with the
+    model axis fixed, and the state survives both reshardings bit-exact."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHRINK_GROW], env=env,
+                         capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rep["shrunk_shape"] == [2, 1, 2]
+    assert rep["shrunk_ndev"] == 4 and rep["grown_ndev"] == 8
+    assert rep["roundtrip_w"] and rep["roundtrip_step"]
+    assert rep["w_shards"] == 8           # P("model", None) spans the mesh

@@ -1,0 +1,332 @@
+"""repro.core.faults: degraded-graph compilation, analytic reroute, and
+the resilience sweep.
+
+The normalization contract under test (docs/faults.md): demand is built
+and normalized on the PRISTINE graph, restricted to the survivors, and
+evaluated on the degraded graph — so degraded theta stays in pristine
+units and theta can only go down when components die.  Conservation on
+the degraded graph (sum of arc loads == demand-weighted degraded
+distance) pins that the reroute really re-converged on the surviving
+topology, in hypothesis form over random fault draws AND as a
+deterministic seeded sweep (the test_traffic_properties convention)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FaultSet, demi_pn_graph, degradation_sweep,
+                        degraded_report, dragonfly_graph, fault_report,
+                        hypercube_graph, oft_graph, pn_graph, random_faults,
+                        targeted_faults)
+from repro.core.graph import bfs_distances_batched
+from repro.core.orbits import automorphism_generators
+from repro.core.traffic import make_pattern, normalize_demand, saturation_report
+from repro.fabric.model import torus3d_graph
+
+GRAPHS = [
+    ("pn5", lambda: pn_graph(5)),
+    ("demi_pn4", lambda: demi_pn_graph(4)),
+    ("oft3", lambda: oft_graph(3)),
+    ("torus_4x4", lambda: torus3d_graph(4, 4, 1)),
+    ("hcube4", lambda: hypercube_graph(4)),
+]
+
+
+def _active(g):
+    leaf = g.meta.get("leaf_mask")
+    return None if leaf is None else np.asarray(leaf, dtype=bool)
+
+
+def _degraded_conservation(g, fs, rep):
+    """sum(loads) == sum(D_restricted * dist_degraded), the Brandes
+    identity on the SURVIVING topology."""
+    gd = fs.apply(g)
+    dem = fs.restrict_demand(
+        g, normalize_demand(make_pattern("uniform").demand(g, _active(g))))
+    np.fill_diagonal(dem, 0.0)
+    dist = bfs_distances_batched(gd, np.arange(gd.n)).astype(np.float64)
+    assert rep.loads.sum() == pytest.approx(float((dist * dem).sum()),
+                                            rel=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# FaultSet: canonical identity and graph resolution
+# ---------------------------------------------------------------------------
+
+
+def test_faultset_canonicalization():
+    fs = FaultSet(links=[(7, 3), (3, 7), (1, 2)], routers=[9, 4, 9])
+    assert fs.links == ((1, 2), (3, 7))          # sorted, deduped, u < v
+    assert fs.routers == (4, 9)
+    assert fs == FaultSet(links=[(2, 1), (7, 3)], routers=(9, 4))
+    assert fs.label == "links[1-2,3-7]+routers[4,9]"
+    assert FaultSet().empty and FaultSet().label == "none"
+    assert not fs.empty
+
+
+def test_faultset_rejects_self_loop():
+    with pytest.raises(ValueError, match="self-loop"):
+        FaultSet(links=[(3, 3)])
+
+
+def test_edge_ids_rejects_non_edges():
+    g = pn_graph(4)
+    u, v = (int(x) for x in g.edges[0])
+    assert FaultSet(links=[(u, v)]).edge_ids(g).tolist() == [0]
+    nonedge = None
+    adj = {tuple(sorted(map(int, e))) for e in g.edges}
+    for a in range(g.n):
+        for b in range(a + 1, g.n):
+            if (a, b) not in adj:
+                nonedge = (a, b)
+                break
+        if nonedge:
+            break
+    with pytest.raises(ValueError, match="not edges"):
+        FaultSet(links=[nonedge]).edge_ids(g)
+
+
+def test_router_ids_out_of_range():
+    g = pn_graph(4)
+    with pytest.raises(ValueError, match="out of range"):
+        FaultSet(routers=[g.n]).router_ids(g)
+
+
+# ---------------------------------------------------------------------------
+# apply: degraded-graph compilation
+# ---------------------------------------------------------------------------
+
+
+def test_apply_link_faults_preserves_n_and_family():
+    g = torus3d_graph(4, 4, 1)
+    fs = random_faults(g, k_links=3, seed=1)
+    gd = fs.apply(g)
+    assert gd.n == g.n
+    assert gd.num_edges == g.num_edges - 3
+    assert gd.meta.get("family") == g.meta.get("family")
+    assert gd.meta["faults"] == fs.label
+    # the removed undirected pairs are exactly fs.links
+    lost = {tuple(sorted(map(int, e))) for e in g.edges} \
+        - {tuple(sorted(map(int, e))) for e in gd.edges}
+    assert lost == set(fs.links)
+
+
+def test_apply_router_faults_relabels_survivors():
+    g = pn_graph(4)
+    fs = FaultSet(routers=[0, 5])
+    gd = fs.apply(g)
+    assert gd.n == g.n - 2
+    assert "family" not in gd.meta and gd.meta["faults"] == fs.label
+    surv = gd.meta["fault_survivors"]
+    assert surv.tolist() == [v for v in range(g.n) if v not in (0, 5)]
+    # every degraded edge maps back to a pristine edge between survivors
+    adj = {tuple(sorted(map(int, e))) for e in g.edges}
+    for a, b in gd.edges:
+        assert tuple(sorted((int(surv[a]), int(surv[b])))) in adj
+
+
+def test_apply_empty_raises():
+    with pytest.raises(ValueError, match="empty FaultSet"):
+        FaultSet().apply(pn_graph(4))
+
+
+def test_router_faults_restrict_leaf_mask():
+    g = oft_graph(3)
+    leaf = np.asarray(g.meta["leaf_mask"], dtype=bool)
+    dead = int(np.nonzero(~leaf)[0][0])     # kill a non-leaf router
+    gd = FaultSet(routers=[dead]).apply(g)
+    assert gd.meta["leaf_mask"].sum() == leaf.sum()
+    assert gd.meta["leaf_mask"].shape == (g.n - 1,)
+
+
+def test_degraded_graph_disables_orbit_shortcut():
+    g = pn_graph(5)
+    assert automorphism_generators(g) is not None
+    gd = random_faults(g, k_links=1, seed=0).apply(g)
+    assert automorphism_generators(gd) is None
+
+
+def test_fault_report_connectivity():
+    g = torus3d_graph(4, 4, 1)
+    rep = fault_report(g, random_faults(g, k_links=2, seed=3))
+    assert rep.connected and rep.evaluable and rep.n_components == 1
+    assert rep.edges_removed == 2 and rep.n_degraded == g.n
+    # cutting all 4 edges of a torus vertex isolates it
+    vid = 5
+    cut = [tuple(sorted(map(int, e))) for e in g.edges
+           if vid in (int(e[0]), int(e[1]))]
+    rep = fault_report(g, FaultSet(links=cut))
+    assert not rep.connected and not rep.evaluable
+    assert sorted(rep.component_sizes) == [1, g.n - 1]
+
+
+def test_random_faults_deterministic_and_connected():
+    g = pn_graph(5)
+    a = random_faults(g, k_links=4, k_routers=1, seed=7)
+    b = random_faults(g, k_links=4, k_routers=1, seed=7)
+    assert a == b
+    assert a != random_faults(g, k_links=4, k_routers=1, seed=8)
+    assert fault_report(g, a).evaluable
+
+
+# ---------------------------------------------------------------------------
+# Analytic reroute: degraded theta semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,builder", GRAPHS)
+@pytest.mark.parametrize("routing", ["minimal", "ugal"])
+def test_degraded_theta_below_pristine_with_conservation(name, builder,
+                                                         routing):
+    g = builder()
+    fs = random_faults(g, k_links=2, seed=0)
+    pristine = saturation_report(g, "uniform", routing=routing).theta
+    rep = degraded_report(g, "uniform", fs, routing=routing)
+    assert rep.theta <= pristine * (1 + 1e-9)
+    assert rep.faults == fs.label
+    if routing == "minimal":
+        _degraded_conservation(g, fs, rep)
+
+
+def test_saturation_report_faults_delegates():
+    g = pn_graph(5)
+    fs = random_faults(g, k_links=3, seed=2)
+    via_kw = saturation_report(g, "uniform", routing="minimal", faults=fs)
+    direct = degraded_report(g, "uniform", fs, routing="minimal")
+    assert via_kw.theta == pytest.approx(direct.theta, rel=1e-12)
+    assert via_kw.faults == fs.label
+    # empty fault set falls through to the pristine path
+    pristine = saturation_report(g, "uniform", routing="minimal",
+                                 faults=FaultSet())
+    assert pristine.faults is None
+
+
+def test_degraded_router_faults_drop_demand_rows():
+    """A dead router takes its injected AND addressed traffic with it:
+    total degraded demand is the pristine total minus those rows/cols."""
+    g = pn_graph(5)
+    fs = FaultSet(routers=[3])
+    dem = normalize_demand(make_pattern("uniform").demand(g, None))
+    rep = degraded_report(g, "uniform", fs, routing="minimal")
+    expect = dem.sum() - dem[3, :].sum() - dem[:, 3].sum()
+    assert rep.total_demand == pytest.approx(expect, rel=1e-12)
+
+
+def test_targeted_cut_at_least_as_damaging_as_random_mean():
+    g = torus3d_graph(4, 4, 1)
+    fs = targeted_faults(g, k=2, kind="links")
+    assert len(fs.links) == 2 and fault_report(g, fs).evaluable
+    th_t = degraded_report(g, "uniform", fs).theta
+    th_r = np.mean([degraded_report(
+        g, "uniform", random_faults(g, k_links=2, seed=s)).theta
+        for s in range(6)])
+    assert th_t <= th_r + 1e-12
+
+
+def test_targeted_router_cut():
+    g = pn_graph(5)
+    fs = targeted_faults(g, k=1, kind="routers")
+    assert len(fs.routers) == 1
+    assert degraded_report(g, "uniform", fs).theta \
+        <= saturation_report(g, "uniform").theta + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# degradation_sweep
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_sweep_curves():
+    g = pn_graph(5)
+    sw = degradation_sweep(g, k_failures=(0, 1, 3), trials=4, seed=0)
+    assert sw.thetas.shape == (4, 3)
+    # k=0 column is the pristine theta, exactly
+    assert np.allclose(sw.thetas[:, 0], sw.pristine_theta)
+    # nested prefixes -> every trial's curve is monotone non-increasing
+    assert (np.diff(sw.thetas, axis=1) <= 1e-12).all()
+    assert (np.diff(sw.mean) <= 1e-12).all()
+    assert (sw.worst <= sw.mean + 1e-12).all()
+    assert (sw.mean <= sw.best + 1e-12).all()
+    assert set(sw.bands) == {10, 50, 90}
+    # seeded determinism
+    sw2 = degradation_sweep(g, k_failures=(0, 1, 3), trials=4, seed=0)
+    np.testing.assert_array_equal(sw.thetas, sw2.thetas)
+
+
+def test_degradation_sweep_router_kind():
+    g = demi_pn_graph(4)
+    sw = degradation_sweep(g, k_failures=(0, 1, 2), trials=3, kind="routers",
+                           seed=1)
+    assert (np.diff(sw.thetas, axis=1) <= 1e-12).all()
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        degradation_sweep(g, kind="switches")
+
+
+# ---------------------------------------------------------------------------
+# Adversary / placement / planner wiring
+# ---------------------------------------------------------------------------
+
+
+def test_worst_case_on_degraded_graph():
+    from repro.core.adversary import worst_case
+    g = torus3d_graph(4, 4, 1)
+    fs = random_faults(g, k_links=2, seed=0)
+    pristine = worst_case(g, model="minimal", n_random=2)
+    degraded = worst_case(g, model="minimal", n_random=2, faults=fs)
+    assert degraded.worst_theta <= pristine.worst_theta + 1e-12
+
+
+def test_placement_report_faults():
+    from repro.fabric import StepProfile, place_mesh, placement_report
+    g = demi_pn_graph(9)
+    p = place_mesh(g, (8, 8), ("data", "model"), 4, "group")
+    prof = StepProfile({"all-to-all": 8e9, "all-reduce": 1e9})
+    pristine = placement_report(p, prof, routing="minimal")
+    fs = random_faults(g, k_links=2, seed=0)
+    degraded = placement_report(p, prof, routing="minimal", faults=fs)
+    assert degraded.faults == fs.label and pristine.faults is None
+    assert degraded.theta <= pristine.theta * (1 + 1e-9)
+
+
+def test_planner_resilience_columns():
+    from repro.fabric import StepProfile, plan
+    prof = StepProfile(bytes_by_kind={"all-reduce": 1e9, "all-to-all": 1e8})
+    rows = plan(prof, min_terminals=100, resilience_k=1, resilience_trials=2)
+    small = [r for r in rows if "resilience_theta" in r]
+    assert small, "no candidate got resilience columns"
+    for r in small:
+        assert r["resilience_k"] == 1
+        assert 0 < r["resilience_frac"] <= 1.0 + 1e-9
+        assert r["resilience_theta"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Property: degraded theta <= pristine + conservation, random fault sets
+# (hypothesis AND a deterministic seeded twin, per repo convention)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(gi=st.integers(0, len(GRAPHS) - 1), seed=st.integers(0, 2 ** 16),
+       k=st.integers(1, 3))
+def test_property_degraded_theta_and_conservation(gi, seed, k):
+    g = GRAPHS[gi][1]()
+    fs = random_faults(g, k_links=k, seed=seed)
+    rep = degraded_report(g, "uniform", fs, routing="minimal")
+    assert rep.theta <= saturation_report(g, "uniform").theta * (1 + 1e-9)
+    _degraded_conservation(g, fs, rep)
+
+
+def test_property_degraded_theta_deterministic_twin():
+    for gi in range(len(GRAPHS)):
+        g = GRAPHS[gi][1]()
+        for seed, k in [(0, 1), (1, 2), (2, 3)]:
+            fs = random_faults(g, k_links=k, seed=seed)
+            rep = degraded_report(g, "uniform", fs, routing="minimal")
+            assert rep.theta \
+                <= saturation_report(g, "uniform").theta * (1 + 1e-9)
+            _degraded_conservation(g, fs, rep)

@@ -1,0 +1,267 @@
+"""Live-sim fault events: masked tables, state surgery, and the
+static-vs-dynamic parity seams (docs/faults.md).
+
+The two seams that pin the fault model:
+
+  * static masked == removed graph, EXACTLY — a link-only FaultSet
+    applied as ``events=[(0, fs)]`` on the pristine simulator must
+    reproduce the per-step history of simulating ``fs.apply(g)``
+    directly (same N, same steps): masking is a reindexing, not an
+    approximation.
+  * static == dynamic knee within 2.5% — the saturation knee with the
+    fault pre-applied equals the knee with the same fault injected
+    mid-run once the window sits after the reroute transient.  The torus
+    seam runs in tier-1; the pn16 seam is `slow` (pn16 is ~0.4 s/step,
+    the ROADMAP kernel item) and re-measured continuously as BENCH_6's
+    ``faults[sim_parity:...]`` row.
+
+Everything else here is conservation: surgery accounts every unit it
+drops, requeue conserves exactly, and the run residual stays at
+round-off through fault AND recovery events."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import FaultSet, degraded_report, pn_graph, random_faults
+from repro.core.traffic import make_pattern, normalize_demand, saturation_report
+from repro.fabric.model import torus3d_graph
+from repro.sim import FaultEvent, SimConfig, Simulator, saturation_sweep
+from repro.sim.faults import apply_fault_surgery, normalize_events
+from repro.sim.tables import build_tables
+
+G16 = torus3d_graph(4, 4, 1)          # 16-router workhorse, numpy backend
+
+
+def _uniform(g):
+    return normalize_demand(make_pattern("uniform").demand(g, None))
+
+
+def _state_mass(st):
+    """Conserved fluid mass of a step-state tuple: queues + source
+    backlog + stage2 credit.  ``pend`` is conversion bookkeeping (its
+    mass mirrors vc1 + stage2), not fluid."""
+    q0, q1, q2, src, pend, stage2 = st
+    return float(q0.sum() + q1.sum() + q2.sum() + src.sum() + stage2.sum())
+
+
+# ---------------------------------------------------------------------------
+# Masked tables
+# ---------------------------------------------------------------------------
+
+
+def test_pristine_tables_are_all_alive():
+    t = build_tables(G16, np.arange(G16.n))
+    assert not t.faulted
+    assert t.slot_ok.all() and t.router_ok.all() and t.dest_ok.all()
+    assert t.routable.all()
+
+
+def test_faulted_tables_masks_and_splits():
+    fs = random_faults(G16, k_links=3, seed=0)
+    t = build_tables(G16, np.arange(G16.n), faults=fs)
+    assert t.faulted
+    # slot_ok mirrors edge_alive through the arc order
+    alive = fs.edge_alive(G16)
+    for r in range(G16.n):
+        deg = G16.indptr[r + 1] - G16.indptr[r]
+        arcs = np.arange(G16.indptr[r], G16.indptr[r + 1])
+        np.testing.assert_array_equal(t.slot_ok[r, :deg],
+                                      alive[G16.arc_edge_id[arcs]])
+        assert not t.slot_ok[r, deg:].any()          # padding stays dead
+    # link-only faults on a connected survivor keep every pair routable
+    assert t.routable.all()
+    # split rows: sum to 1 on routable non-self pairs, only via live slots
+    for r in range(G16.n):
+        for d in range(t.m):
+            row = t.split[r, :, d]
+            assert not row[~t.slot_ok[r]].any()
+            if r != t.active[d]:
+                assert row.sum() == pytest.approx(1.0, abs=1e-12)
+    # distances recomputed on the degraded graph
+    gd = fs.apply(G16)
+    from repro.core.graph import bfs_distances_batched
+    np.testing.assert_array_equal(
+        t.dist_act, bfs_distances_batched(gd, np.arange(gd.n)))
+
+
+def test_router_fault_tables_mask_dest_and_row():
+    fs = FaultSet(routers=[5])
+    t = build_tables(G16, np.arange(G16.n), faults=fs)
+    assert not t.router_ok[5] and not t.dest_ok[5]
+    assert not t.routable[5, :].any() and not t.routable[:, 5].any()
+    assert not t.slot_ok[5].any()
+    alive = [r for r in range(G16.n) if r != 5]
+    assert t.routable[np.ix_(alive, alive)].all()
+    # no split ever sends fluid toward the dead dest
+    assert not t.split[:, :, 5].any()
+
+
+def test_faulted_tables_disconnect_raises():
+    vid = 5
+    cut = [tuple(sorted(map(int, e))) for e in G16.edges
+           if vid in (int(e[0]), int(e[1]))]
+    with pytest.raises(ValueError, match="disconnect the active set"):
+        build_tables(G16, np.arange(G16.n), faults=FaultSet(links=cut))
+
+
+# ---------------------------------------------------------------------------
+# Event schedule validation
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_events():
+    fs = random_faults(G16, k_links=1, seed=0)
+    evs = normalize_events([(40, FaultSet()), FaultEvent(10, fs)])
+    assert [e.step for e in evs] == [10, 40]
+    assert evs[0].faults == fs and evs[1].faults.empty
+    assert normalize_events(None) == ()
+    with pytest.raises(ValueError, match="duplicate"):
+        normalize_events([(10, fs), (10, FaultSet())])
+    with pytest.raises(ValueError, match="nonnegative"):
+        FaultEvent(-1, fs)
+    with pytest.raises(TypeError, match="FaultSet"):
+        FaultEvent(3, "links[0-1]")
+
+
+def test_event_past_run_end_raises():
+    sim = Simulator(G16, SimConfig(routing="minimal"))
+    fs = random_faults(G16, k_links=1, seed=0)
+    with pytest.raises(ValueError, match="past"):
+        sim.run(_uniform(G16), offered=0.1, steps=50, events=[(50, fs)])
+
+
+# ---------------------------------------------------------------------------
+# State surgery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fs", [
+    FaultSet(routers=[5]),
+    random_faults(G16, k_links=3, seed=2),
+])
+def test_surgery_accounts_every_dropped_unit(fs):
+    sim = Simulator(G16, SimConfig(routing="ugal_threshold(0)"))
+    sim.run(_uniform(G16), offered=0.3, steps=40)
+    st = sim.last_state.as_tuple()
+    tb, _ = sim._tables_for(fs)
+    st2, dropped = apply_fault_surgery(st, tb)
+    assert _state_mass(st2) == pytest.approx(_state_mass(st) - dropped,
+                                             rel=1e-12, abs=1e-12)
+    if fs.routers:
+        assert dropped > 0                    # dead router loses real fluid
+    # idempotent: a second pass against the same tables drops nothing
+    st3, dropped2 = apply_fault_surgery(st2, tb)
+    assert dropped2 == pytest.approx(0.0, abs=1e-12)
+    for a, b in zip(st2, st3):
+        np.testing.assert_allclose(a, b, atol=1e-12)
+
+
+def test_surgery_requeues_dead_slot_fluid():
+    """Link-only faults on a connected survivor drop nothing: fluid in
+    dead out-slots moves to live slots of the same router, exactly."""
+    fs = random_faults(G16, k_links=3, seed=2)
+    sim = Simulator(G16, SimConfig(routing="minimal"))
+    sim.run(_uniform(G16), offered=0.3, steps=40)
+    st = sim.last_state.as_tuple()
+    tb, _ = sim._tables_for(fs)
+    st2, dropped = apply_fault_surgery(st, tb)
+    assert dropped == pytest.approx(0.0, abs=1e-12)
+    q0 = st2[0]
+    assert not (q0 * ~tb.slot_ok[:, :, None]).any()
+    np.testing.assert_allclose(q0.sum(), st[0].sum(), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Run-level semantics
+# ---------------------------------------------------------------------------
+
+
+def test_static_masked_equals_removed_graph_exactly():
+    """The exact seam: events=[(0, fs)] on the pristine simulator ==
+    simulating fs.apply(g).  Steps must match explicitly — the two
+    Simulators derive different default_steps from their diameters."""
+    fs = random_faults(G16, k_links=3, seed=1)
+    dem = _uniform(G16)
+    masked = Simulator(G16, SimConfig(routing="ugal_threshold(1)")).run(
+        dem, offered=0.3, steps=120, events=[(0, fs)])
+    removed = Simulator(fs.apply(G16),
+                        SimConfig(routing="ugal_threshold(1)")).run(
+        dem, offered=0.3, steps=120)
+    assert masked.theta == pytest.approx(removed.theta, rel=1e-12)
+    for key in ("delivered", "accepted", "occupancy", "diverted"):
+        np.testing.assert_allclose(masked.history[key],
+                                   removed.history[key], atol=1e-12)
+    assert masked.faults == fs.label
+
+
+def test_midrun_fault_dip_and_recovery():
+    fs = random_faults(G16, k_links=3, seed=1)
+    sim = Simulator(G16, SimConfig(routing="minimal"))
+    dem = _uniform(G16)
+    ref = degraded_report(G16, "uniform", fs).theta
+    run = sim.run(dem, offered=0.7 * ref, steps=240, window=60,
+                  events=[(80, fs), (160, FaultSet())])
+    d = run.history["delivered"]
+    pre = d[60:80].mean()
+    assert d[80:95].min() < pre - 1e-6        # reroute transient dips
+    assert d[-30:].mean() == pytest.approx(pre, rel=0.02)   # heals
+    assert run.residual < 1e-9
+    assert run.faults is None                 # final state is pristine
+    np.testing.assert_array_equal(run.history["fault_events"], [80, 160])
+
+
+def test_midrun_router_fault_drops_and_conserves():
+    fs = FaultSet(routers=[5])
+    sim = Simulator(G16, SimConfig(routing="ugal_threshold(0)"))
+    run = sim.run(_uniform(G16), offered=0.3, steps=200, window=50,
+                  events=[(70, fs)])
+    assert run.dropped > 0
+    assert run.residual < 1e-9                # residual includes dropped
+    assert run.faults == fs.label
+    # theta is measured against the SURVIVING demand of the final state
+    degraded = degraded_report(G16, "uniform", fs).theta
+    assert run.theta / run.offered == pytest.approx(1.0, abs=0.02) \
+        or run.theta <= degraded
+
+
+def test_static_fault_theta_matches_analytic_below_knee():
+    fs = random_faults(G16, k_links=3, seed=1)
+    ref = degraded_report(G16, "uniform", fs).theta
+    sim = Simulator(G16, SimConfig(routing="minimal"))
+    run = sim.run(_uniform(G16), offered=0.9 * ref, steps=240, window=60,
+                  events=[(0, fs)])
+    assert run.theta / run.offered == pytest.approx(1.0, abs=0.01)
+    run = sim.run(_uniform(G16), offered=1.15 * ref, steps=240, window=60,
+                  events=[(0, fs)])
+    assert run.theta / run.offered < 0.99     # collapses above the knee
+
+
+# ---------------------------------------------------------------------------
+# The knee parity seam (acceptance): static == dynamic within 2.5%
+# ---------------------------------------------------------------------------
+
+
+def _knee_parity(g, steps, event_frac=0.4, seed=0):
+    fs = random_faults(g, k_links=2, seed=seed)
+    ref = degraded_report(g, "uniform", fs, routing="minimal").theta
+    loads = np.array([0.96, 1.05]) * ref
+    static = saturation_sweep(g, "uniform", "minimal", loads=loads,
+                              refine=2, theta_analytic=ref, steps=steps,
+                              events=[(0, fs)])
+    dynamic = saturation_sweep(g, "uniform", "minimal", loads=loads,
+                               refine=2, theta_analytic=ref, steps=steps,
+                               events=[(int(event_frac * steps), fs)])
+    return abs(static.theta - dynamic.theta) / static.theta
+
+
+def test_knee_parity_static_vs_dynamic_torus():
+    assert _knee_parity(torus3d_graph(8, 16, 1), steps=648) <= 0.025
+
+
+@pytest.mark.slow
+def test_knee_parity_static_vs_dynamic_pn16():
+    # pn16 is ~0.4 s/step (ROADMAP kernel item), so the full bisection
+    # lives in the slow tier; BENCH_6 carries the torus seam continuously
+    assert _knee_parity(pn_graph(16), steps=120) <= 0.025
