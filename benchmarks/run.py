@@ -53,14 +53,16 @@ def main(argv=None) -> None:
                     help="write per-entry wall time + max_rel_err as JSON")
     ap.add_argument("--only",
                     choices=["tables", "figures", "traffic", "routing",
-                             "placement", "sim", "faults", "all"],
+                             "placement", "sim", "faults", "kernels",
+                             "all"],
                     default="all",
                     help="restrict to the paper tables, figures, the "
                          "traffic-pattern saturation sweep, the "
                          "adversarial routing-model table, the "
                          "placement strategy/fragmentation table, the "
-                         "simulator parity table (BENCH_5), or the "
-                         "fault degradation curves (BENCH_6)")
+                         "simulator parity table (BENCH_5), the "
+                         "fault degradation curves (BENCH_6), or the "
+                         "fused step kernel rows (BENCH_7)")
     ap.add_argument("--err-budget", type=float, default=0.25, metavar="E",
                     help="fail (exit 1) when any entry's max_rel_err exceeds "
                          "E instead of only recording it (negative: record "
@@ -157,6 +159,28 @@ def main(argv=None) -> None:
                    err_of=lambda o: o[1])
         records[-1]["row"] = out[0]
 
+    def run_kernels():
+        from . import kernel_bench as kb
+        out = _run(records, "kernels[pn16:step_timing]", kb.step_timing,
+                   lambda o: (f"numpy={o[0]['ms_per_step']['numpy']:.1f}ms"
+                              f" jax={o[0]['ms_per_step']['jax']:.1f}ms"
+                              f" pallas={o[0]['ms_per_step']['pallas']:.1f}ms"),
+                   err_of=lambda o: o[1])
+        records[-1]["row"] = out[0]
+        out = _run(records, "kernels[pn16:sweep]", kb.pn16_sweep,
+                   lambda o: (f"theta={o[0]['theta_sim']:.4f}"
+                              f" analytic={o[0]['theta_analytic']:.4f}"
+                              f" speedup={o[0]['speedup']:.1f}x"),
+                   err_of=lambda o: o[1])
+        records[-1]["row"] = out[0]
+        out = _run(records, "kernels[pn27:sweep]", kb.pn27_sweep,
+                   lambda o: (f"theta={o[0]['theta_sim']:.4f}"
+                              f" analytic={o[0]['theta_analytic']:.4f}"
+                              f" cells={o[0]['dense_cells']}"
+                              f" backend={o[0]['backend']}"),
+                   err_of=lambda o: o[1])
+        records[-1]["row"] = out[0]
+
     def run_figures():
         from . import paper_figures as figs
         _run(records, "fig5_mms_vs_moore", figs.fig5,
@@ -172,7 +196,7 @@ def main(argv=None) -> None:
     sections = [("tables", run_tables), ("traffic", run_traffic),
                 ("routing", run_routing), ("sim", run_sim),
                 ("placement", run_placement), ("faults", run_faults),
-                ("figures", run_figures)]
+                ("kernels", run_kernels), ("figures", run_figures)]
     for name, body in sections:
         if args.only in (name, "all"):
             section(name, body)

@@ -26,6 +26,7 @@ ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}"     # seconds
 PLACEMENT_BUDGET="${CI_PLACEMENT_BUDGET:-300}" # seconds
 SIM_BUDGET="${CI_SIM_BUDGET:-900}"             # seconds
 FAULT_BUDGET="${CI_FAULT_BUDGET:-600}"         # seconds
+KERNEL_BUDGET="${CI_KERNEL_BUDGET:-600}"       # seconds
 
 echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
 timeout "$TIER1_BUDGET" python -m pytest -x -q
@@ -80,5 +81,13 @@ echo "== benchmarks: fault degradation curves -> BENCH_6.json (budget ${FAULT_BU
 # non-increasing in k (relative violation > --err-budget) or the
 # static-vs-dynamic sim fault parity row's knee gap blows the budget
 timeout "$FAULT_BUDGET" python -m benchmarks.run --json BENCH_6.json --only faults
+
+echo "== benchmarks: fused step kernel rows -> BENCH_7.json (budget ${KERNEL_BUDGET}s) =="
+# the fused sparse-dest sim backend: pn16 step timings + the 10x sweep
+# acceptance row + the PN(27) past-the-dense-cap sweep.  --err-budget
+# 0.025 is the ISSUE's 2.5% knee-parity bound — benchmarks.run exits
+# nonzero when any row's measured theta drifts further from analytic
+timeout "$KERNEL_BUDGET" python -m benchmarks.run --json BENCH_7.json \
+    --only kernels --err-budget 0.025
 
 echo "== ci.sh green =="

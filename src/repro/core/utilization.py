@@ -29,6 +29,12 @@ repro.perf for the selection flags):
   jax    — the same level-synchronous dense recurrences as jnp matmuls,
            jit-compiled per (shape, level-count) and chunked over source
            blocks to bound device memory; float64 via a scoped x64 switch.
+  pallas — the jax engine's recurrences through the fused mask+GEMM
+           pallas kernels (repro.kernels.mask_gemm): the distance-table
+           mask runs in the GEMM epilogue instead of as a second pass
+           over the (S, N) level state.  Compiled float32 on TPU;
+           float64 under the pallas interpreter elsewhere (the parity /
+           development path).
   orbit  — automorphism shortcut (repro.core.orbits): the total load
            vector is constant on arc orbits, and per-arc-orbit sums are
            constant as the source ranges over a vertex orbit, so one
@@ -61,7 +67,7 @@ from .graph import Graph, bfs_distances
 __all__ = ["arc_loads", "arc_loads_weighted", "utilization",
            "UtilizationReport", "valiant_report"]
 
-_ENGINES = ("auto", "naive", "numpy", "csr", "jax", "orbit")
+_ENGINES = ("auto", "naive", "numpy", "csr", "jax", "pallas", "orbit")
 
 # float32 GEMMs are exact on integer path counts below 2^24; promote to
 # float64 past this guard.
@@ -789,6 +795,104 @@ def _loads_jax_x64(g: Graph, sources, targets_mask, jax, jnp, demand=None):
     return loads, dist_sum, pair_count, diam
 
 
+def _loads_pallas(g: Graph, sources: np.ndarray, targets_mask: np.ndarray,
+                  demand: np.ndarray | None = None):
+    """``engine="pallas"``: the jax engine's level recurrences through the
+    fused mask+GEMM kernels (repro.kernels.mask_gemm) — compiled float32
+    on TPU, float64 under the pallas interpreter elsewhere (the parity /
+    development path, same convention as repro.sim's pallas backends)."""
+    import jax
+    import jax.numpy as jnp
+
+    if jax.default_backend() == "tpu":
+        return _loads_pallas_impl(g, sources, targets_mask, jax, jnp,
+                                  demand, interpret=False, f64=False)
+    old_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        return _loads_pallas_impl(g, sources, targets_mask, jax, jnp,
+                                  demand, interpret=True, f64=True)
+    finally:
+        jax.config.update("jax_enable_x64", old_x64)
+
+
+def _loads_pallas_impl(g: Graph, sources, targets_mask, jax, jnp,
+                       demand=None, *, interpret, f64):
+    from ..kernels.mask_gemm import backward_step, frontier_step
+
+    n = g.n
+    dtype = jnp.float64 if f64 else jnp.float32
+    adj = jnp.asarray(g.adjacency_dense(np.float64), dtype)
+    arc_u = jnp.asarray(g.arc_src)
+    arc_v = jnp.asarray(g.indices)
+    tm = jnp.asarray(targets_mask, dtype)
+    t_count = int(targets_mask.sum())
+
+    @jax.jit
+    def coeff_of(w, delta, dist, sigma, lvl):
+        m = dist == lvl
+        return jnp.where(m, (w + delta) / jnp.where(m, sigma, 1.0), 0.0)
+
+    @jax.jit
+    def arc_sum(sigma, ctot, dist):
+        s_u = sigma[:, arc_u]
+        c_v = ctot[:, arc_v]
+        tree = dist[:, arc_v] == dist[:, arc_u] + 1
+        return (s_u * c_v * tree).sum(axis=0)
+
+    loads = np.zeros(g.arc_src.shape[0], dtype=np.float64)
+    dist_sum = 0.0
+    pair_count: float = 0
+    diam = 0
+    block = _source_block_rows(n)
+    for lo in range(0, len(sources), block):
+        sb = sources[lo : lo + block]
+        b = len(sb)
+        rows = np.arange(b)
+        front0 = np.zeros((b, n), dtype=np.float64)
+        front0[rows, sb] = 1.0
+        dist0 = np.full((b, n), -1, dtype=np.int32)
+        dist0[rows, sb] = 0
+        front = jnp.asarray(front0, dtype)
+        dist = jnp.asarray(dist0)
+        sigma = jnp.asarray(front0, dtype)
+        lvl = 0
+        while True:
+            lvl += 1
+            front, dist, sigma = frontier_step(front, adj, dist, sigma,
+                                               lvl, interpret=interpret)
+            if not bool((front > 0).any()):
+                maxd = lvl - 1
+                break
+        dist_np = np.asarray(dist)
+        if (dist_np < 0).any():
+            raise ValueError("graph is disconnected")
+        if demand is None:
+            w = tm[None, :]
+            dm = dist_np[:, targets_mask]
+            diam = max(diam, int(dm.max()))
+            dist_sum += float(dm.sum(dtype=np.float64))
+            pair_count += b * t_count - int(targets_mask[sb].sum())
+        else:
+            w_np = demand[sb]
+            active = w_np > 0
+            if active.any():
+                diam = max(diam, int(dist_np[active].max()))
+            dist_sum += float((dist_np * w_np).sum(dtype=np.float64))
+            pair_count += float(w_np.sum())
+            w = jnp.asarray(w_np, dtype)
+
+        delta = jnp.zeros((b, n), dtype=dtype)
+        ctot = jnp.zeros((b, n), dtype=dtype)
+        for l in range(maxd, 0, -1):
+            coeff = coeff_of(w, delta, dist, sigma, l)
+            delta = backward_step(coeff, adj, dist, sigma, delta, l - 1,
+                                  interpret=interpret)
+            ctot = ctot + coeff
+        loads += np.asarray(arc_sum(sigma, ctot, dist), dtype=np.float64)
+    return loads, dist_sum, pair_count, diam
+
+
 # ---------------------------------------------------------------------------
 # Engine: orbit shortcut
 # ---------------------------------------------------------------------------
@@ -897,6 +1001,11 @@ def arc_loads(g: Graph, sources=None, targets_mask: np.ndarray | None = None,
         if not _jax_available():
             raise RuntimeError("engine='jax' requested but jax is not importable")
         res = _loads_jax(g, sources, targets_mask)
+    elif eng == "pallas":
+        if not _jax_available():
+            raise RuntimeError(
+                "engine='pallas' requested but jax is not importable")
+        res = _loads_pallas(g, sources, targets_mask)
     else:  # auto, orbits disabled or explicit sources
         res = _exact_engine(g)(g, sources, targets_mask)
 
@@ -994,6 +1103,11 @@ def arc_loads_weighted(g: Graph, demand,
         if not _jax_available():
             raise RuntimeError("engine='jax' requested but jax is not importable")
         res = _loads_jax(g, sources, targets_mask, demand)
+    elif eng == "pallas":
+        if not _jax_available():
+            raise RuntimeError(
+                "engine='pallas' requested but jax is not importable")
+        res = _loads_pallas(g, sources, targets_mask, demand)
     else:  # auto / orbit: the exact-path choice by graph size
         res = _exact_engine(g)(g, sources, targets_mask, demand)
 

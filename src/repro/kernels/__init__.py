@@ -2,13 +2,20 @@
 architectures (flash attention, Mamba-2 SSD scan) + jit'd wrappers (ops)
 + pure-jnp oracles (ref).
 
-The paper itself is a network-topology contribution with no kernel-level
-component; these kernels serve the model substrate the framework trains/
-serves on the projective fabrics.
+The model-substrate kernels (flash attention, SSD scan) serve the
+frameworks trained/served on the projective fabrics; sim_step and
+mask_gemm are the topology side's own hot spots — the flow-level
+simulator's fused sparse-destination step (repro.sim
+``backend="pallas"``) and the batched-Brandes mask+GEMM level
+recurrences (repro.core.utilization ``engine="pallas"``).
 """
 
 from . import ops, ref
 from .flash_attention import flash_attention
+from .mask_gemm import backward_step, frontier_step
+from .sim_step import DEST_TILE, fused_step_update
 from .ssd_scan import ssd_scan
 
-__all__ = ["ops", "ref", "flash_attention", "ssd_scan"]
+__all__ = ["ops", "ref", "flash_attention", "ssd_scan",
+           "fused_step_update", "DEST_TILE", "frontier_step",
+           "backward_step"]

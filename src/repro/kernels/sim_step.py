@@ -1,0 +1,126 @@
+"""Fused simulator-step kernel: forward share, credit throttle, and
+ECMP enqueue of one virtual channel in a single pass over blocked
+``(router, out-slot, dest-tile)`` state.
+
+The flow-level simulator (repro.sim) spends its step almost entirely in
+one contraction per VC: apply the proportional forward share and the
+credit damping to every queue cell, eject the delivered diagonal, and
+enqueue the decided inflow through the equal-split minimal table —
+four sweeps over the ``(N, K, M)`` queue tensor when written naively.
+This kernel fuses them into one read and one write per populated
+``(router-block, dest-tile)`` block:
+
+    q_out = q * fac[r, k]                     # forward + credit retention
+          - q * corr[r, k] * deliver[r, k, d]  # ejected fluid keeps no credit
+          + inflow[r, d] * split[r, k, d]      # per-hop ECMP enqueue
+
+with ``fac = 1 - share * damp`` and ``corr = share * (1 - damp)`` folded
+host-side (both are O(N·K)).  The second output accumulates the
+post-step per-slot occupancy ``o_out[r, k] = sum_d q_out`` across dest
+tiles (flash-attention-style revisiting of the output block along the
+innermost grid axis), which the next step's share computation consumes.
+
+The dest axis is *blocked-sparse*: ``tile_mask`` (one int32 per dest
+tile, scalar-prefetched) marks the populated tiles; unpopulated tiles —
+zero fluid and zero inflow, so the contraction is identically zero —
+are skipped under ``pl.when`` and only pay the (clipped) output write.
+This is the kernel seam behind ``SimConfig(backend="pallas")``; the
+numpy float64 engine remains the parity oracle and
+``backend="pallas_interpret"`` runs this exact kernel through the
+pallas interpreter on CPU (tests/test_sim_kernel.py).
+
+Block structure and the compiler-params compat shim follow
+flash_attention.py / ssd_scan.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_step_update", "DEST_TILE"]
+
+# dest-tile width: the TPU lane dimension; also the block the numpy
+# fused path (repro.sim.kernel) uses so both backends skip identical
+# (router, dest-tile) blocks
+DEST_TILE = 128
+
+
+def _kernel(mask_ref, q_ref, split_ref, deliver_ref, fac_ref, corr_ref,
+            inflow_ref, qout_ref, oout_ref, *, m):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        oout_ref[...] = jnp.zeros_like(oout_ref)
+
+    @pl.when(mask_ref[j] != 0)
+    def _compute():
+        q = q_ref[...]
+        upd = q * fac_ref[...][:, :, None]
+        upd -= q * corr_ref[...][:, :, None] * deliver_ref[...]
+        upd += inflow_ref[...][:, None, :] * split_ref[...]
+        qout_ref[...] = upd
+        # a partial last tile is block-padded with undefined values (the
+        # write-back is clipped, but the occupancy sum must exclude them)
+        bd = q_ref.shape[-1]
+        col = j * bd + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bd), 2)
+        oout_ref[...] += jnp.where(col < m, upd, 0.0).sum(axis=-1)
+
+    @pl.when(mask_ref[j] == 0)
+    def _skip():
+        # unpopulated tile: no fluid, no inflow -> the block stays zero
+        qout_ref[...] = jnp.zeros_like(qout_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret"))
+def fused_step_update(q, split, deliver, fac, corr, inflow, tile_mask,
+                      block_n: int = 128, block_d: int = DEST_TILE,
+                      interpret: bool = False):
+    """One VC's fused forward/throttle/enqueue update.
+
+    Args:
+      q:         (N, K, M) queue tensor (float32/float64).
+      split:     (N, K, M) equal-split minimal table.
+      deliver:   (N, K, M) delivery mask (head == dest), same dtype as q.
+      fac:       (N, K)    ``1 - share * damp`` retention factor.
+      corr:      (N, K)    ``share * (1 - damp)`` delivery correction.
+      inflow:    (N, M)    decided vc inflow to enqueue.
+      tile_mask: (ceil(M / block_d),) int32, nonzero = populated tile.
+
+    Returns ``(q_out, o_out)``: the updated queues and the per-slot
+    post-step occupancy ``q_out.sum(-1)``.
+    """
+    n, k, m = q.shape
+    bn = min(block_n, n)
+    bd = min(block_d, m)
+    grid = (pl.cdiv(n, bn), pl.cdiv(m, bd))
+
+    qkd = pl.BlockSpec((bn, k, bd), lambda i, j, mask: (i, 0, j))
+    nk = pl.BlockSpec((bn, k), lambda i, j, mask: (i, 0))
+    nd = pl.BlockSpec((bn, bd), lambda i, j, mask: (i, j))
+
+    kwargs = {}
+    if not interpret:
+        from ._compat import CompilerParams
+        kwargs["compiler_params"] = CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[qkd, qkd, qkd, nk, nk, nd],
+            out_specs=[qkd, nk],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((n, k, m), q.dtype),
+                   jax.ShapeDtypeStruct((n, k), q.dtype)],
+        interpret=interpret,
+        **kwargs,
+    )(jnp.asarray(tile_mask, jnp.int32), q, split, deliver, fac, corr,
+      inflow)

@@ -31,7 +31,10 @@ Topology-analytics flags (the batched all-source BFS/Brandes engine behind
                   run on half-size biadjacency blocks, graphs beyond
                   util_dense_max fall back to a CSR reduceat sweep),
                   ``csr`` (force the sparse sweep), ``jax`` (jnp GEMMs,
-                  jit-compiled, chunked over source blocks), or ``orbit``
+                  jit-compiled, chunked over source blocks), ``pallas``
+                  (the jax recurrences through the fused mask+GEMM
+                  kernels of repro.kernels.mask_gemm — compiled on TPU,
+                  pallas-interpreter float64 elsewhere), or ``orbit``
                   (force the automorphism shortcut; errors if the family
                   has no known generators).
   util_orbits=0 — disable the orbit shortcut inside ``auto``.  The
@@ -100,7 +103,7 @@ class PerfFlags:
     # all-gather).  Replicated weights make those blocks pure local DP.
     replicate_ff: bool = False
     # Arc-load engine selection for repro.core.utilization (see module
-    # docstring): auto | naive | numpy | csr | jax | orbit.
+    # docstring): auto | naive | numpy | csr | jax | pallas | orbit.
     util_engine: str = "auto"
     # Let `auto` use the automorphism-orbit shortcut (exact; one Brandes
     # sweep per vertex orbit instead of per vertex).
@@ -118,9 +121,14 @@ class PerfFlags:
     # releases the GIL in GEMM/ufunc loops, so 2 single-BLAS-thread sweeps
     # overlap ~perfectly on 2 cores).  1 = sequential.
     util_workers: int = 2
-    # Flow-level simulator backend (repro.sim): auto | numpy | jax.
-    # auto picks the jit-compiled jax step for large (N * degree * dests)
-    # instances and the numpy reference otherwise.
+    # Flow-level simulator backend (repro.sim): auto | numpy | jax |
+    # pallas | pallas_interpret.  auto picks the jit-compiled jax step
+    # for large (N * degree * dests) instances, the numpy reference
+    # otherwise, and the fused blocked sparse-dest step (repro.sim.kernel
+    # — the pallas kernel on TPU, its blocked numpy mirror on CPU) once
+    # the dense cell count exceeds engine.SIM_MAX_CELLS; pallas_interpret
+    # runs the actual kernel through the pallas interpreter (parity
+    # testing).  SimConfig(backend=...) overrides per run.
     sim_backend: str = "auto"
 
 

@@ -43,9 +43,10 @@ import numpy as np
 
 from ..core.graph import Graph
 from ..core.traffic import make_pattern, normalize_demand, saturation_report
-from .engine import (SIM_JAX_MIN_WORK, SimConfig, SimState, init_state,
-                     make_step, parse_sim_routing, pick_backend)
+from .engine import (SIM_JAX_MIN_WORK, SIM_MAX_CELLS, SimConfig, SimState,
+                     init_state, make_step, parse_sim_routing, pick_backend)
 from .faults import FaultEvent, apply_fault_surgery, normalize_events
+from .kernel import SPARSE_BACKENDS, make_step_sparse, resolve_dtype
 from .tables import RouteTables, build_tables
 
 __all__ = [
@@ -58,10 +59,6 @@ __all__ = [
 # four sub-saturation points for the latency curve plus one past
 # saturation to pin the delivered-throughput plateau
 DEFAULT_LOAD_GRID = (0.3, 0.6, 0.85, 1.0, 1.2)
-
-# densest instance the dense per-dest state supports: three (N, K, M)
-# float64 VC tensors plus same-shape step temporaries (~2 GB at the cap)
-SIM_MAX_CELLS = 50_000_000
 
 
 def fluid_routing_spec(sim_routing) -> str:
@@ -144,7 +141,8 @@ class Simulator:
     a whole sweep)."""
 
     def __init__(self, g: Graph, config: SimConfig = SimConfig(),
-                 targets_mask: np.ndarray | None = None):
+                 targets_mask: np.ndarray | None = None,
+                 demand: np.ndarray | None = None):
         self.g = g
         self.config = config
         if targets_mask is None:
@@ -152,22 +150,43 @@ class Simulator:
         self.active = (np.arange(g.n) if targets_mask is None
                        else np.nonzero(np.asarray(targets_mask, bool))[0])
         work = g.n * g.max_degree * len(self.active)
-        if work > SIM_MAX_CELLS:
+        self.backend = pick_backend(config.backend, work)
+        if self.backend not in SPARSE_BACKENDS and work > SIM_MAX_CELLS:
             raise ValueError(
                 f"simulation state is dense (router, out-slot, dest) "
                 f"tensors: {work} cells > SIM_MAX_CELLS={SIM_MAX_CELLS} "
                 f"(~{8 * 3 * SIM_MAX_CELLS >> 30} GB of queue state).  "
-                f"Use a smaller instance of the same family.")
-        self.backend = pick_backend(config.backend, work)
-        # float64 on both backends: the jax step runs under a scoped
-        # enable_x64 — float32 rounding bias visibly shifts the threshold
-        # rule's diversion duty cycle (backends would disagree)
-        self.dtype = np.float64
+                f"Use backend='pallas' (the blocked sparse-dest step) or "
+                f"a smaller instance of the same family.")
+        # Static dest compaction: under minimal routing every dest column
+        # evolves independently, so dropping the columns ``demand`` never
+        # addresses is exact — and what lets > SIM_MAX_CELLS fabrics run.
+        # ugal/valiant spread diversions over the whole active set, so
+        # compaction would change the intermediate pool there; those
+        # modes keep all columns and rely on the fused backends' dynamic
+        # (router, dest-tile) block skipping instead.
+        if (demand is not None and config.mode == "minimal"
+                and self.backend in SPARSE_BACKENDS):
+            used = np.asarray(demand)[:, self.active].sum(axis=0) > 0
+            if not used.all():
+                self.active = self.active[used]
+        # dense backends default to float64 (the jax step runs under a
+        # scoped enable_x64 — float32 rounding bias visibly shifts the
+        # threshold rule's diversion duty cycle); the fused sparse-dest
+        # backends default to float32, the TPU-native dtype, with the
+        # dense float64 path as their parity oracle
+        self.dtype = resolve_dtype(config.dtype, self.backend)
         self.tables = build_tables(g, self.active, dtype=self.dtype)
-        self._step = make_step(self.tables, config, self.backend, self.dtype)
+        self._step = self._make_step(self.tables)
         # fault-state label -> (tables, compiled step); one compile per
         # distinct fault state serves every run and every load probe
         self._fault_cache: dict = {}
+
+    def _make_step(self, tb):
+        if self.backend in SPARSE_BACKENDS:
+            return make_step_sparse(tb, self.config, self.backend,
+                                    self.dtype)
+        return make_step(tb, self.config, self.backend, self.dtype)
 
     def _tables_for(self, fs):
         """Route tables + step function for one fault state (None or an
@@ -178,14 +197,20 @@ class Simulator:
         if key not in self._fault_cache:
             tb = build_tables(self.g, self.active, dtype=self.dtype,
                               faults=fs)
-            self._fault_cache[key] = (
-                tb, make_step(tb, self.config, self.backend, self.dtype))
+            self._fault_cache[key] = (tb, self._make_step(tb))
         return self._fault_cache[key]
 
-    def default_steps(self) -> int:
+    def default_steps(self, events=None) -> int:
         """Enough steps for the slowest feedback loop to settle: several
-        two-leg traversals plus a fixed transient allowance."""
+        two-leg traversals plus a fixed transient allowance.  Fault
+        ``events`` can grow distances when the fabric degrades, so the
+        sizing takes the max distance over every fault segment's tables
+        (cached — a run with the same schedule reuses them)."""
         dmax = int(self.tables.dist_act.max())
+        for e in normalize_events(events):
+            if e.faults is not None and not e.faults.empty:
+                tb, _ = self._tables_for(e.faults)
+                dmax = max(dmax, int(tb.dist_act.max()))
         return 48 + 16 * 2 * dmax
 
     def run(self, demand: np.ndarray, offered: float,
@@ -223,11 +248,12 @@ class Simulator:
                              "placement_demand already do)")
         if inj_norm.sum() <= 0:
             raise ValueError("demand matrix is all zero")
-        steps = self.default_steps() if steps is None else int(steps)
+        evs = normalize_events(events)
+        steps = (self.default_steps(events=evs) if steps is None
+                 else int(steps))
         window = max(steps // 3, 8) if window is None else int(window)
         window = min(window, steps)
 
-        evs = normalize_events(events)
         if evs and evs[-1].step >= steps:
             raise ValueError(f"fault event at step {evs[-1].step} is past "
                              f"the run's {steps} steps")
@@ -242,6 +268,10 @@ class Simulator:
         # (under its enable_x64 scope, so float64 survives the round trip)
         st = init_state(t, self.dtype).as_tuple()
         hist = np.empty((steps, 6), dtype=np.float64)
+        # per-step surviving-demand total: each fault segment's history
+        # is normalized by ITS OWN fault state's surviving demand, not
+        # the final one — a pre-event curve segment is in pre-event units
+        seg_total = np.empty(steps, dtype=np.float64)
         dropped_total = 0.0
         tb = t
         for s0, s1, fs in segs:
@@ -253,6 +283,8 @@ class Simulator:
                 if tb.faulted else inj
             inj_cap = (self.config.inj_factor
                        * inj_seg.sum(axis=1)).astype(self.dtype)
+            seg_total[s0:s1] = float((inj_norm * tb.routable).sum()
+                                     if tb.faulted else inj_norm.sum())
             for i in range(s0, s1):
                 st, stats = step_fn(st, inj_seg, inj_cap)
                 hist[i] = np.asarray(stats, dtype=np.float64)
@@ -263,10 +295,12 @@ class Simulator:
 
         # theta in the FINAL fault state's surviving demand units — the
         # value the analytic degraded_report theta is comparable to
-        total = float((inj_norm * tb.routable).sum() if tb.faulted
-                      else inj_norm.sum())
+        total = float(seg_total[-1])
         if total <= 0:
             raise ValueError("faults removed every offered demand")
+        # a mid-run segment can have zero surviving demand (recovered
+        # later); its normalized history rows are identically zero
+        norm = np.where(seg_total > 0, seg_total, np.inf)
         w = hist[-window:]
         delivered_rate = float(w[:, 0].mean())
         accepted_rate = float(w[:, 1].mean())
@@ -290,9 +324,9 @@ class Simulator:
             dropped=dropped_total,
             faults=(None if final_fs is None or final_fs.empty
                     else final_fs.label),
-            history={"delivered": hist[:, 0] / total,
-                     "accepted": hist[:, 1] / total,
-                     "offered": hist[:, 2] / total,
+            history={"delivered": hist[:, 0] / norm,
+                     "accepted": hist[:, 1] / norm,
+                     "offered": hist[:, 2] / norm,
                      "occupancy": hist[:, 3], "src_backlog": hist[:, 4],
                      "diverted": hist[:, 5],
                      "fault_events": np.array([e.step for e in evs],
@@ -324,8 +358,8 @@ def simulate(g: Graph, pattern, routing: str = "minimal",
     (see :meth:`Simulator.run`)."""
     cfg = _config_with(config, routing)
     _, demand, targets_mask = _demand_for(g, pattern, targets_mask, normalize)
-    return Simulator(g, cfg, targets_mask).run(demand, offered, steps,
-                                               events=events)
+    return Simulator(g, cfg, targets_mask, demand=demand).run(
+        demand, offered, steps, events=events)
 
 
 def _config_with(config: SimConfig | None, routing: str) -> SimConfig:
@@ -333,7 +367,7 @@ def _config_with(config: SimConfig | None, routing: str) -> SimConfig:
     parse_sim_routing(routing)  # validate before building tables
     return SimConfig(routing=routing, buffer=base.buffer,
                      capacity=base.capacity, inj_factor=base.inj_factor,
-                     backend=base.backend)
+                     backend=base.backend, dtype=base.dtype)
 
 
 def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
@@ -367,7 +401,7 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
     if loads is None:
         loads = np.asarray(DEFAULT_LOAD_GRID) * ref
     loads = np.sort(np.asarray(loads, dtype=np.float64))
-    simr = Simulator(g, cfg, targets_mask)
+    simr = Simulator(g, cfg, targets_mask, demand=demand)
     grid = [simr.run(demand, lam, steps, events=events) for lam in loads]
     runs = list(grid)
 
@@ -398,13 +432,17 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
                 lo = mid
             else:
                 hi = mid
+    # the curve includes EVERY probe — grid, bracket extensions, and
+    # bisection refinements — sorted by offered load, so a sweep whose
+    # initial grid missed the knee still returns points near saturation
+    curve = sorted(runs, key=lambda r: r.offered)
     return SimSweep(
         pattern=pat.name, routing=cfg.routing, theta=lo, theta_unstable=hi,
         theta_analytic=float(ref), stable_ratio=stable_ratio,
-        loads=np.array([r.offered for r in grid]),
-        delivered=np.array([r.theta for r in grid]),
-        latency=np.array([r.latency for r in grid]),
-        alpha=np.array([r.alpha for r in grid]), runs=runs)
+        loads=np.array([r.offered for r in curve]),
+        delivered=np.array([r.theta for r in curve]),
+        latency=np.array([r.latency for r in curve]),
+        alpha=np.array([r.alpha for r in curve]), runs=runs)
 
 
 def simulate_placement(placement, profile, routing: str = "ugal_threshold(0)",
@@ -433,4 +471,5 @@ def simulate_placement(placement, profile, routing: str = "ugal_threshold(0)",
                                routing=fluid_routing_spec(routing),
                                axis_of=axis_of).theta
         offered = 1.2 * ref
-    return Simulator(placement.graph, cfg).run(norm, offered, steps)
+    return Simulator(placement.graph, cfg, demand=norm).run(
+        norm, offered, steps)

@@ -45,7 +45,8 @@ import numpy as np
 from .tables import RouteTables
 
 __all__ = ["SimConfig", "SimState", "make_step", "init_state",
-           "parse_sim_routing", "pick_backend", "SIM_JAX_MIN_WORK"]
+           "parse_sim_routing", "pick_backend", "SIM_JAX_MIN_WORK",
+           "SIM_MAX_CELLS"]
 
 _BIG = 1e12     # unreachable-queue sentinel for masked mins
 _TINY = 1e-30   # safe-division floor
@@ -53,6 +54,12 @@ _TINY = 1e-30   # safe-division floor
 # Above this many (router, slot, dest) cells the jit-compiled JAX step
 # beats numpy; below it, trace/dispatch overhead dominates.
 SIM_JAX_MIN_WORK = 1_500_000
+
+# Dense-backend ceiling on (router, slot, dest) cells (~2.4 GB of f64
+# queue planes): above it the dense numpy/jax steps are refused and the
+# blocked sparse-dest backends (repro.sim.kernel) take over — via
+# ``auto`` resolution, or explicitly with backend="pallas".
+SIM_MAX_CELLS = 50_000_000
 
 _SIM_SPEC_RE = re.compile(
     r"^\s*(minimal|valiant|ugal|ugal_threshold)\s*(?:\(\s*([^)]*)\s*\))?\s*$")
@@ -86,13 +93,20 @@ class SimConfig:
     (``inf`` = the fluid limit); ``capacity`` the per-arc flits/step;
     ``inj_factor`` caps the per-step source drain at ``inj_factor`` times
     the offered quantum so a backlogged source cannot flood the fabric in
-    one step; ``backend`` is ``auto`` / ``numpy`` / ``jax``."""
+    one step; ``backend`` is ``auto`` / ``numpy`` / ``jax`` /
+    ``pallas`` / ``pallas_interpret`` (the fused blocked sparse-dest
+    step of repro.sim.kernel — the pallas kernel on TPU, the same
+    blocked structure in numpy on CPU, or the kernel under the pallas
+    interpreter); ``dtype`` is the state dtype — ``auto`` (float64 for
+    the dense backends, float32 for the fused ones), ``float32``, or
+    ``float64``."""
 
     routing: str = "minimal"
     buffer: float = float("inf")
     capacity: float = 1.0
     inj_factor: float = 1.0
     backend: str = "auto"
+    dtype: str = "auto"
 
     @property
     def mode(self) -> str:
@@ -120,17 +134,22 @@ class SimState:
 
 def pick_backend(backend: str, work: int) -> str:
     """Resolve ``auto`` (and validate explicit choices) against what is
-    importable: JAX for large instances, numpy otherwise.  An ``auto``
-    request defers to the ``sim_backend`` perf flag first (REPRO_PERF),
-    so whole runs can be pinned without threading a config through."""
+    importable: the fused sparse-dest backend beyond the dense cell cap,
+    JAX for large instances, numpy otherwise.  An ``auto`` request
+    defers to the ``sim_backend`` perf flag first (REPRO_PERF), so whole
+    runs can be pinned without threading a config through."""
     if backend == "auto":
         from ..perf import flags
         backend = flags().sim_backend
+    if backend in ("pallas", "pallas_interpret"):
+        return backend
     if backend == "numpy":
         return "numpy"
     if backend not in ("jax", "auto"):
-        raise ValueError(f"unknown sim backend {backend!r}; "
-                         f"options: auto, numpy, jax")
+        raise ValueError(f"unknown sim backend {backend!r}; options: "
+                         f"auto, numpy, jax, pallas, pallas_interpret")
+    if backend == "auto" and work > SIM_MAX_CELLS:
+        return "pallas"
     try:
         import jax  # noqa: F401
     except ImportError:

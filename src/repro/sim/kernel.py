@@ -1,0 +1,627 @@
+"""Blocked sparse-destination step backends for the flow-level simulator.
+
+The dense engine (repro.sim.engine) materializes every intermediate of
+the step — ``mv``/``del``/``cont`` tensors, an ``np.add.at`` scatter —
+which costs ~30 passes over the O(N·K·M) queue state per step and caps
+instances at SIM_MAX_CELLS.  This module is the ``backend="pallas"``
+seam: the same step semantics, restructured around one fused
+forward/throttle/enqueue contraction per VC over a *blocked* dest axis
+(tiles of :data:`repro.kernels.sim_step.DEST_TILE` destinations), with
+only populated (router, dest-tile) blocks computed:
+
+* ``backend="pallas"`` — on a TPU backend the contraction runs as the
+  pallas kernel :func:`repro.kernels.sim_step.fused_step_update`; on CPU
+  it runs a numpy implementation with the *same blocked structure*
+  (mirroring the convention of ``repro.kernels.ops``: the CPU backend
+  cannot lower Mosaic kernels, so the host path reproduces the kernel's
+  block/bytes shape).  Five passes over the queue state instead of ~30:
+
+    1. per-tile occupancy reduction (carried across steps while the
+       state round-trips untouched, e.g. inside ``Simulator.run``),
+    2. the arrival gather ``arr[h] = sum share(a)·q[a]`` over reverse
+       arcs as one sparse-matrix product (delivered fluid is the
+       extracted ``(router, self-dest)`` column, O(N) per tile — the
+       deliver mask has at most one hit per arc),
+    3. the fused update ``q·fac - q·corr·deliver + inflow·split`` tile
+       by tile, which is exactly the pallas kernel's contraction.
+
+* ``backend="pallas_interpret"`` — the pallas kernel itself through the
+  pallas interpreter on CPU: slow, but bit-for-bit the TPU program;
+  this is the backend the parity tests drive against the numpy float64
+  oracle (tests/test_sim_kernel.py).
+
+Both backends accept float32 (the TPU-native dtype, default) or float64
+state via ``SimConfig(dtype=...)``; the dense numpy float64 engine stays
+the parity oracle, with knee-level agreement at tolerance rather than
+bitwise (rounding shifts individual threshold decisions, not the knee).
+
+Destination sparsity has a static half too: for ``minimal`` routing the
+Simulator compacts the dest axis to the demanded columns (see
+``Simulator(demand=...)``), which is what lifts the SIM_MAX_CELLS dense
+cap — a pn27-class fabric (64M dense cells) sweeps in a few-M-cell
+compacted state.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from .engine import _BIG, _TINY, SimConfig
+from .tables import RouteTables
+
+__all__ = ["make_step_sparse", "step_aux", "resolve_dtype",
+           "SPARSE_BACKENDS"]
+
+SPARSE_BACKENDS = ("pallas", "pallas_interpret")
+
+# dest-tile width shared with the pallas kernel (import kept lazy so the
+# numpy path works without jax installed)
+DEST_TILE = 128
+
+
+class _StepAux:
+    """Arc-level index structure shared by the fused backends.
+
+    Everything here depends only on the RouteTables: the reverse-arc
+    pairing that turns the arrival scatter into a gather, the per-arc
+    dest index of the head router (the deliver mask has at most one true
+    per arc — delivery is O(N·K), not O(N·K·M)), and the dest tiling.
+    """
+
+    def __init__(self, t: RouteTables, tile: int = DEST_TILE):
+        n, k, m = t.n, t.k, t.m
+        self.n, self.k, self.m = n, k, m
+        nk = n * k
+        head_flat = t.head.reshape(-1)
+        inv_act = np.full(n + 1, m, dtype=np.int64)
+        inv_act[t.active] = np.arange(m)
+        # dest index of each arc's head (m = not a dest); fluid on arc a
+        # addressed to dd[a] is delivered, everything else transits
+        self.dd = inv_act[head_flat]                      # (NK,)
+        self.self_d = inv_act[:n]                         # (N,)
+        # reverse-arc pairing from the head table alone (multi-edges are
+        # matched in slot order, so the pairing is a perfect matching on
+        # real arcs even on multigraphs)
+        buckets: dict = defaultdict(lambda: ([], []))
+        for a in range(nk):
+            h = head_flat[a]
+            if h >= n:
+                continue
+            r = a // k
+            lo, hi = (r, h) if r <= h else (h, r)
+            buckets[(lo, hi)][0 if r <= h else 1].append(a)
+        rev = np.full(nk, -1, dtype=np.int64)
+        for (lo, hi), (fwd, bwd) in buckets.items():
+            if lo == hi:  # self-loop: pair consecutive slots
+                for x, y in zip(fwd[0::2], fwd[1::2]):
+                    rev[x], rev[y] = y, x
+                continue
+            if len(fwd) != len(bwd):
+                raise ValueError("head table is not symmetric: cannot "
+                                 "pair reverse arcs")
+            for x, y in zip(fwd, bwd):
+                rev[x], rev[y] = y, x
+        self.rev = rev                                    # (NK,) partner
+        real = np.nonzero(rev >= 0)[0]
+        # deliver fixup: arcs whose head is a dest
+        fr = real[self.dd[real] < m]
+        self.fix_arc = fr                                 # (F,) arc flats
+        self.fix_dst = self.dd[fr]                        # (F,) dest col
+        self.fix_router = fr // k                         # (F,) own router
+        # delivered extraction: routers that are dests themselves
+        hs = np.nonzero(self.self_d < m)[0]
+        self.dst_router = hs                              # (H,)
+        self.dst_col = self.self_d[hs]                    # (H,)
+        # arrival gather as a sparse matrix: row h sums share(a)·q[a]
+        # over h's in-arcs a (the reverse arcs of h's out-slots)
+        import scipy.sparse as sp
+        # R[h, a] = 1 where arc a ends at router h (the reverse arcs of
+        # h's out-slots); data is refilled with share[a] each step, so
+        # R @ q_flat is the arrival gather arr[h] = sum share(a)·q[a]
+        rows = real // k
+        cols = rev[real]
+        self.R = sp.csr_matrix((np.ones(len(real)), (rows, cols)),
+                               shape=(n, nk))
+        self.R.sum_duplicates()
+        self.R.sort_indices()
+        # dest tiling
+        self.tile = tile
+        self.starts = np.arange(0, m, tile)
+        self.tiles = [(int(lo), int(min(lo + tile, m)))
+                      for lo in self.starts]
+        self.n_tiles = len(self.tiles)
+        self.fix_tile = self.fix_dst // tile              # (F,)
+
+
+def step_aux(t: RouteTables, tile: int = DEST_TILE) -> _StepAux:
+    """The (cached) arc-index structure of one RouteTables instance."""
+    aux = getattr(t, "_step_aux", None)
+    if aux is None or aux.tile != tile:
+        aux = _StepAux(t, tile)
+        t._step_aux = aux
+    return aux
+
+
+def resolve_dtype(name: str, backend: str):
+    """State dtype for a backend: the fused backends default to float32
+    (TPU-native; the dense float64 engine stays the oracle), the dense
+    backends to float64."""
+    if name == "auto":
+        return np.float32 if backend in SPARSE_BACKENDS else np.float64
+    if name in ("f32", "float32"):
+        return np.float32
+    if name in ("f64", "float64"):
+        return np.float64
+    raise ValueError(f"unknown sim dtype {name!r}; options: auto, "
+                     "float32, float64")
+
+
+def make_step_sparse(t: RouteTables, cfg: SimConfig, backend: str, dtype):
+    """Build the blocked sparse-dest ``step(state, inj, inj_cap)`` for
+    ``backend`` in :data:`SPARSE_BACKENDS`.  Same contract as
+    :func:`repro.sim.engine.make_step`; ``dtype`` is the state dtype
+    (float32 default — the dense float64 engine is the parity oracle)."""
+    if backend == "pallas":
+        try:
+            import jax
+            on_tpu = jax.default_backend() == "tpu"
+        except ImportError:
+            on_tpu = False
+        if on_tpu:
+            return _make_step_kernel(t, cfg, dtype, interpret=False)
+        return _make_step_fused_numpy(t, cfg, dtype)
+    if backend == "pallas_interpret":
+        return _make_step_kernel(t, cfg, dtype, interpret=True)
+    raise ValueError(f"unknown sparse sim backend {backend!r}; "
+                     f"options: {SPARSE_BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# numpy fused path (CPU fast path: same blocked structure as the kernel)
+# ---------------------------------------------------------------------------
+
+
+def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
+    aux = step_aux(t)
+    n, k, m = t.n, t.k, t.m
+    nk = n * k
+    asd = lambda a: np.ascontiguousarray(np.asarray(a, dtype=dtype))
+    split3 = asd(t.split)                     # (N, K, M)
+    split_flat = split3.reshape(nk, m)
+    # column sums of split: 1 where the dest is reachable, 0 where not —
+    # the enqueue's exact mass multiplier for the occupancy accounting
+    reach = asd(t.split.sum(axis=1))          # (N, M)
+    spread = asd(t.spread)
+    w_val = asd(np.einsum("nm,nkm->nk", t.spread, t.split))
+    dist_act = asd(t.dist_act)
+    hval_rem = asd(t.hval_rem)
+    spread_T = asd(t.spread.T)
+    in_active = np.zeros(n, dtype=bool)
+    in_active[t.active] = True
+    n_mids = asd(t.m - in_active)
+    faulted = bool(getattr(t, "faulted", False))
+    active = t.active
+    head_flat = t.head.reshape(-1)
+    mode, thr = cfg.mode, cfg.threshold
+    cap = dtype(cfg.capacity)
+    buf = dtype(min(cfg.buffer, _BIG))
+    thr = dtype(thr)
+    tiny = dtype(_TINY) if dtype == np.float64 else np.float32(1e-30)
+    # private dtype-matched copy: scipy upcasts mixed-dtype products, so
+    # an f64 R would silently run the whole arrival gather in f64
+    R = aux.R.astype(dtype)
+    fr, fd, fro, ftl = aux.fix_arc, aux.fix_dst, aux.fix_router, aux.fix_tile
+    hs, sd = aux.dst_router, aux.dst_col
+    tiles, n_tiles, starts = aux.tiles, aux.n_tiles, aux.starts
+    midx = np.arange(m)
+
+    # double-buffered outputs: the step is functional (inputs untouched),
+    # but reuses its own previous output buffers when the caller feeds
+    # the returned state back in (the run loop), avoiding allocations
+    bufs = [[np.zeros((n, k, m), dtype=dtype) for _ in range(3)]
+            for _ in range(2)]
+    scratch = np.empty((nk, m), dtype=dtype)
+    # carried per-(arc, tile) occupancies, keyed by the identity of the
+    # state arrays we returned; any foreign state (step 0, post-surgery)
+    # triggers a fresh reduction pass
+    cache = {"key": None, "ot": None}
+
+    def occupancies(qs):
+        key = tuple(id(q) for q in qs)
+        if cache["key"] == key:
+            return cache["ot"]
+        ot = []
+        for q in qs:
+            qf = q.reshape(nk, m)
+            ot.append(np.add.reduceat(qf, starts, axis=1)
+                      if m else np.zeros((nk, 0), dtype=dtype))
+        return ot
+
+    def step(state, inj, inj_cap):
+        # f32 note: space/tiny overflows to inf and is clipped by the
+        # minimum(1, .) throttle — intended, not an error
+        with np.errstate(over="ignore"):
+            return _step(state, inj, inj_cap)
+
+    def _step(state, inj, inj_cap):
+        q0, q1, q2, src, pend, stage2 = [np.asarray(a, dtype=dtype)
+                                         for a in state]
+        qs = (q0, q1, q2)
+        ot = occupancies(qs)                      # 3 x (NK, T)
+        o = [x.sum(axis=1) for x in ot]           # 3 x (NK,)
+        tmass = [x.sum(axis=0) for x in ot]       # 3 x (T,)
+        vc_live = [bool(tm.any()) for tm in tmass]
+
+        share = cap / np.maximum(o[0] + o[1] + o[2], cap)      # (NK,)
+
+        # -- arrivals: one sparse gather per live vc -------------------
+        if any(vc_live):
+            R.data[:] = share[R.indices]
+        arr = []
+        dl_sum = [dtype(0.0)] * 3
+        stage2_add = None
+        for v, q in enumerate(qs):
+            if not vc_live[v]:
+                arr.append(np.zeros((n, m), dtype=dtype))
+                continue
+            a = np.asarray(R @ q.reshape(nk, m))
+            dl = a[hs, sd]
+            if v == 1:
+                stage2_add = (hs, dl.copy())
+            else:
+                dl_sum[v] = dl.sum()
+            a[hs, sd] = 0.0                        # transit arrivals only
+            arr.append(a)
+
+        # -- credit throttle ------------------------------------------
+        s_v, damp, fac, fixdelta, rowfwd = [], [], [], [], []
+        for v in range(3):
+            own = (o[v] * (1.0 - share)).reshape(n, k).sum(axis=1)
+            space = np.maximum(buf - own, 0.0)
+            desire = arr[v].sum(axis=1)
+            s = np.minimum(1.0, space / np.maximum(desire, tiny))
+            sp = np.concatenate([s, np.ones(1, dtype=dtype)])
+            d = sp[head_flat]                      # (NK,)
+            f = 1.0 - share * d
+            vals = qs[v].reshape(nk, m)[fr, fd]
+            fx = vals * share[fr] * (1.0 - d[fr])
+            rf = (o[v] * f).reshape(n, k).sum(axis=1) \
+                - np.bincount(fro, weights=fx, minlength=n).astype(dtype)
+            arr[v] *= s[:, None]
+            s_v.append(s)
+            damp.append(d)
+            fac.append(f)
+            fixdelta.append(fx)
+            rowfwd.append(rf)
+
+        delivered = dl_sum[0] + dl_sum[2]
+
+        # -- phase-1 conversions --------------------------------------
+        if stage2_add is not None:
+            stage2 = stage2.copy()
+            stage2[sd] += stage2_add[1]
+        conv2 = None
+        if stage2.any() and pend.any():
+            occ2_now = rowfwd[2] + arr[2].sum(axis=1)
+            avail2 = np.maximum(buf - occ2_now, 0.0)[active]
+            pend_sum = pend.sum(axis=1)
+            drain = np.minimum(np.minimum(stage2, avail2), pend_sum)
+            mix = pend / np.maximum(pend_sum, tiny)[:, None]
+            take = drain[:, None] * mix
+            pend = pend - take
+            stage2 = stage2 - drain
+            delivered = delivered + take[midx, midx].sum()
+            take = take.copy()
+            np.fill_diagonal(take, 0.0)
+            conv2 = np.zeros((n, m), dtype=dtype)
+            conv2[active] = take
+
+        # -- injection -------------------------------------------------
+        src = src + inj
+        srcsum = src.sum(axis=1)
+        frac = np.minimum(srcsum, inj_cap) / np.maximum(srcsum, tiny)
+        q_inj = src * frac[:, None]
+        src = src - q_inj
+
+        # -- routing decision -----------------------------------------
+        cand = arr[0] + q_inj
+        div_tot = dtype(0.0)
+        if mode == "minimal":
+            div_eff = None
+            trans_keep = arr[0]
+            inj_keep = q_inj
+        else:
+            if mode == "valiant":
+                div_cand = cand
+            else:
+                b0 = np.maximum(o[0] - cap, 0.0).reshape(n, k)
+                b1 = np.maximum(o[1] - cap, 0.0).reshape(n, k)
+                rows = np.nonzero(b0.any(axis=1))[0]
+                q_min = np.zeros((n, m), dtype=dtype)
+                if rows.size > n // 4:
+                    q_min = np.matmul(b0[:, None, :], split3)[:, 0, :]
+                elif rows.size:
+                    for r in rows:
+                        q_min[r] = b0[r] @ split3[r]
+                q_val = (b1 * w_val).sum(axis=1)
+                div_ind = (dist_act * q_min
+                           > thr + hval_rem * q_val[:, None]).astype(dtype)
+                div_cand = cand * div_ind
+            occ1_now = rowfwd[1] + arr[1].sum(axis=1)
+            space1 = np.maximum(buf - occ1_now, 0.0)
+            desire1 = div_cand.sum(axis=1)
+            s1d = np.minimum(1.0, space1 / np.maximum(desire1, tiny))
+            div_eff = div_cand * s1d[:, None]
+            div_tot = div_eff.sum()
+            if div_tot > 0:
+                if faulted:
+                    pend = pend + spread_T @ div_eff
+                else:
+                    scaled = div_eff / n_mids[:, None]
+                    pend = pend + scaled.sum(0)[None, :] - scaled[active, :]
+            keep = cand - div_eff
+            keep_frac = keep / np.maximum(cand, tiny)
+            trans_keep = arr[0] * keep_frac
+            inj_keep = q_inj * keep_frac
+
+        occ0_now = rowfwd[0] + trans_keep.sum(axis=1)
+        space0 = np.maximum(buf - occ0_now, 0.0)
+        desire0 = inj_keep.sum(axis=1)
+        s0i = np.minimum(1.0, space0 / np.maximum(desire0, tiny))
+        inj_adm = inj_keep * s0i[:, None]
+        src = src + (inj_keep - inj_adm)
+
+        inflow = [trans_keep + inj_adm, None, None]
+        if div_eff is not None and div_tot > 0:
+            inflow[1] = arr[1] + div_eff.sum(axis=1)[:, None] * spread
+        elif vc_live[1]:
+            inflow[1] = arr[1]
+        if conv2 is not None:
+            inflow[2] = arr[2] + conv2
+        elif vc_live[2]:
+            inflow[2] = arr[2]
+
+        # -- fused update + enqueue over live (dest-tile) slabs --------
+        # contiguous runs of live tiles process as one slab: fewer numpy
+        # dispatches and contiguous column ranges, same blocks skipped
+        out_set = 1 if any(q is bufs[0][v] for v, q in enumerate(qs)) else 0
+        new_qs, occ_total = [], stage2.sum()
+        new_ot = []
+        for v in range(3):
+            q = qs[v]
+            live = vc_live[v] or (inflow[v] is not None
+                                  and bool(inflow[v].any()))
+            if not live:
+                new_qs.append(q)                   # all-zero: pass through
+                new_ot.append(ot[v])
+                continue
+            infl = inflow[v]
+            if infl is None:
+                infl = np.zeros((n, m), dtype=dtype)
+            itm = np.add.reduceat(infl.sum(axis=0), starts) \
+                if m else np.zeros(0, dtype=dtype)
+            out = bufs[out_set][v]
+            if out is q:                           # never alias the input
+                out = bufs[1 - out_set][v]
+            outf = out.reshape(nk, m)
+            qf = q.reshape(nk, m)
+            otn = np.empty_like(ot[v])
+            live_t = (tmass[v] > 0) | (itm > 0)
+            ti = 0
+            while ti < n_tiles:
+                if not live_t[ti]:
+                    outf[:, tiles[ti][0]:tiles[ti][1]] = 0.0
+                    otn[:, ti] = 0.0
+                    ti += 1
+                    continue
+                tj = ti
+                while tj + 1 < n_tiles and live_t[tj + 1]:
+                    tj += 1
+                lo, hi = tiles[ti][0], tiles[tj][1]
+                # out = inflow*split + q*fac over the slab; the retention
+                # product goes through a preallocated scratch plane (a
+                # fresh 20 MB temporary per vc per step would be mmap'd
+                # and page-faulted every time)
+                np.multiply(infl[:, None, lo:hi], split3[:, :, lo:hi],
+                            out=out[:, :, lo:hi])
+                np.multiply(qf[:, lo:hi], fac[v][:, None],
+                            out=scratch[:, lo:hi])
+                outf[:, lo:hi] += scratch[:, lo:hi]
+                # per-(arc, tile) occupancies fall out of one reduction
+                # over the finished slab (retention + enqueue together)
+                otn[:, ti:tj + 1] = np.add.reduceat(
+                    outf[:, lo:hi], starts[ti:tj + 1] - lo, axis=1)
+                ti = tj + 1
+            if len(fr):
+                outf[fr, fd] -= fixdelta[v]
+                otn[fr, ftl] -= fixdelta[v]
+            occ_total = occ_total + rowfwd[v].sum() \
+                + (infl * reach).sum()
+            new_qs.append(out)
+            new_ot.append(otn)
+
+        cache["key"] = tuple(id(q) for q in new_qs)
+        cache["ot"] = new_ot
+
+        accepted = q_inj.sum() - (inj_keep - inj_adm).sum()
+        stats = np.array([delivered, accepted, inj.sum(), occ_total,
+                          src.sum(), div_tot], dtype=np.float64)
+        return (new_qs[0], new_qs[1], new_qs[2], src, pend, stage2), stats
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# pallas-kernel path (TPU deploy target; interpret mode on CPU for parity)
+# ---------------------------------------------------------------------------
+
+
+def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.sim_step import fused_step_update
+
+    aux = step_aux(t)
+    n, k, m = t.n, t.k, t.m
+    nk = n * k
+    tile, n_tiles = aux.tile, aux.n_tiles
+    pad = n_tiles * tile - m
+    asd = lambda a: jnp.asarray(np.asarray(a, dtype=dtype))
+    split3 = asd(t.split)
+    deliver = asd(t.deliver)
+    reach = asd(t.split.sum(axis=1))
+    spread = asd(t.spread)
+    w_val = asd(np.einsum("nm,nkm->nk", t.spread, t.split))
+    dist_act = asd(t.dist_act)
+    hval_rem = asd(t.hval_rem)
+    spread_T = asd(t.spread.T)
+    in_active = np.zeros(n, dtype=bool)
+    in_active[t.active] = True
+    n_mids = asd(t.m - in_active)
+    faulted = bool(getattr(t, "faulted", False))
+    active = jnp.asarray(t.active)
+    head_flat = jnp.asarray(t.head.reshape(-1))
+    # reverse-arc gather: sentinel -> the appended zero row
+    rev = jnp.asarray(np.where(aux.rev >= 0, aux.rev, nk).reshape(n, k))
+    hs, sd = jnp.asarray(aux.dst_router), jnp.asarray(aux.dst_col)
+    mode, thr = cfg.mode, cfg.threshold
+    npdt = dtype
+    cap = npdt(cfg.capacity)
+    buf = npdt(min(cfg.buffer, _BIG))
+    thr = npdt(thr)
+    tiny = npdt(_TINY) if npdt == np.float64 else np.float32(1e-30)
+    midx = jnp.arange(m)
+
+    def tile_sums(x):                        # (..., M) -> (..., T)
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        return xp.reshape(x.shape[:-1] + (n_tiles, tile)).sum(-1)
+
+    def step_impl(state, inj, inj_cap):
+        q0, q1, q2, src, pend, stage2 = state
+        qs = (q0, q1, q2)
+        o = [q.reshape(nk, m).sum(axis=1) for q in qs]
+        share = cap / jnp.maximum(o[0] + o[1] + o[2], cap)    # (NK,)
+
+        arr, dl_sum, s_v, damp = [], [], [], []
+        zrow = jnp.zeros((1, m), dtype=q0.dtype)
+        stage2_new = stage2
+        for v, q in enumerate(qs):
+            mv = jnp.concatenate([q.reshape(nk, m) * share[:, None], zrow])
+            a = mv[rev.reshape(-1)].reshape(n, k, m).sum(axis=1)
+            dl = a[hs, sd]
+            if v == 1:
+                stage2_new = stage2_new.at[sd].add(dl)
+            dl_sum.append(dl.sum())
+            a = a.at[hs, sd].set(0.0)
+            own = (o[v] * (1.0 - share)).reshape(n, k).sum(axis=1)
+            space = jnp.maximum(buf - own, 0.0)
+            desire = a.sum(axis=1)
+            s = jnp.minimum(1.0, space / jnp.maximum(desire, tiny))
+            d = jnp.concatenate([s, jnp.ones(1, q0.dtype)])[head_flat]
+            arr.append(a * s[:, None])
+            s_v.append(s)
+            damp.append(d)
+
+        delivered = dl_sum[0] + dl_sum[2]
+        stage2 = stage2_new
+
+        def rowfwd(v):
+            # post-forward per-router occupancy, without touching q:
+            # retention of o minus the delivered fluid's extra share
+            f = (o[v] * (1.0 - share * damp[v])).reshape(n, k).sum(axis=1)
+            vals = qs[v].reshape(nk, m)[aux.fix_arc, aux.fix_dst]
+            fx = vals * share[aux.fix_arc] * (1.0 - damp[v][aux.fix_arc])
+            return f - jnp.zeros(n, q0.dtype).at[aux.fix_router].add(fx)
+
+        # -- conversions ----------------------------------------------
+        occ2_now = rowfwd(2) + arr[2].sum(axis=1)
+        avail2 = jnp.maximum(buf - occ2_now, 0.0)[active]
+        pend_sum = pend.sum(axis=1)
+        drain = jnp.minimum(jnp.minimum(stage2, avail2), pend_sum)
+        mix = pend / jnp.maximum(pend_sum, tiny)[:, None]
+        take = drain[:, None] * mix
+        pend = pend - take
+        stage2 = stage2 - drain
+        delivered = delivered + take[midx, midx].sum()
+        take = take.at[midx, midx].set(0.0)
+        conv2 = jnp.zeros((n, m), q0.dtype).at[active].set(take)
+
+        # -- injection -------------------------------------------------
+        src = src + inj
+        srcsum = src.sum(axis=1)
+        frac = jnp.minimum(srcsum, inj_cap) / jnp.maximum(srcsum, tiny)
+        q_inj = src * frac[:, None]
+        src = src - q_inj
+
+        # -- decision --------------------------------------------------
+        cand = arr[0] + q_inj
+        if mode == "minimal":
+            div_eff = jnp.zeros_like(cand)
+        else:
+            if mode == "valiant":
+                div_ind = jnp.ones_like(cand)
+            else:
+                b0 = jnp.maximum(o[0] - cap, 0.0).reshape(n, k)
+                b1 = jnp.maximum(o[1] - cap, 0.0).reshape(n, k)
+                q_min = jnp.einsum("nk,nkm->nm", b0, split3)
+                q_val = (b1 * w_val).sum(axis=1)
+                div_ind = (dist_act * q_min
+                           > thr + hval_rem * q_val[:, None]
+                           ).astype(q0.dtype)
+            div_cand = cand * div_ind
+            occ1_now = rowfwd(1) + arr[1].sum(axis=1)
+            space1 = jnp.maximum(buf - occ1_now, 0.0)
+            desire1 = div_cand.sum(axis=1)
+            s1d = jnp.minimum(1.0, space1 / jnp.maximum(desire1, tiny))
+            div_eff = div_cand * s1d[:, None]
+            if faulted:
+                pend = pend + spread_T @ div_eff
+            else:
+                scaled = div_eff / n_mids[:, None]
+                pend = pend + scaled.sum(0)[None, :] - scaled[active, :]
+
+        keep = cand - div_eff
+        keep_frac = keep / jnp.maximum(cand, tiny)
+        trans_keep = arr[0] * keep_frac
+        inj_keep = q_inj * keep_frac
+        occ0_now = rowfwd(0) + trans_keep.sum(axis=1)
+        space0 = jnp.maximum(buf - occ0_now, 0.0)
+        desire0 = inj_keep.sum(axis=1)
+        s0i = jnp.minimum(1.0, space0 / jnp.maximum(desire0, tiny))
+        inj_adm = inj_keep * s0i[:, None]
+        src = src + (inj_keep - inj_adm)
+
+        inflow = [trans_keep + inj_adm,
+                  arr[1] + div_eff.sum(axis=1)[:, None] * spread,
+                  arr[2] + conv2]
+
+        # -- fused kernel: forward + throttle retention + enqueue ------
+        occ = stage2.sum()
+        new_qs = []
+        for v in range(3):
+            fac2 = (1.0 - share * damp[v]).reshape(n, k)
+            corr2 = (share * (1.0 - damp[v])).reshape(n, k)
+            mass = tile_sums(qs[v].reshape(nk, m).sum(axis=0)
+                             + inflow[v].sum(axis=0))
+            tmask = (mass > 0).astype(jnp.int32)
+            qn, on = fused_step_update(qs[v], split3, deliver, fac2,
+                                       corr2, inflow[v], tmask,
+                                       interpret=interpret)
+            occ = occ + on.sum()
+            new_qs.append(qn)
+
+        accepted = q_inj.sum() - (inj_keep - inj_adm).sum()
+        stats = jnp.stack([delivered, accepted, inj.sum(), occ,
+                           src.sum(), div_eff.sum()])
+        return (new_qs[0], new_qs[1], new_qs[2], src, pend, stage2), stats
+
+    jitted = jax.jit(step_impl)
+    if dtype == np.float64:
+        def step(state, inj, inj_cap):
+            with jax.experimental.enable_x64():
+                return jitted(state, inj, inj_cap)
+        return step
+    return jitted

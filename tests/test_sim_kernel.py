@@ -1,0 +1,222 @@
+"""The fused sparse-destination step kernel seam (repro.sim.kernel +
+repro.kernels.sim_step/mask_gemm) and the PR's sim-reporting fixes.
+
+Parity contract: the dense numpy float64 engine is the oracle.
+``backend="pallas"`` on CPU runs the same blocked sparse-dest algebra in
+numpy (bit-level comparable at float64); ``backend="pallas_interpret"``
+runs the actual pallas kernel through the interpreter — same fluid, TPU
+summation order, so float64 agreement to round-off.  Dest compaction
+(minimal routing only) must be EXACT: dropping never-addressed dest
+columns is a reindexing, not an approximation.
+
+The reporting regressions pinned here:
+  * run histories are normalized per fault segment (a pre-event curve
+    segment is in pre-event surviving-demand units);
+  * saturation_sweep curves include every probe (bracket extensions and
+    bisection refinements), sorted by offered load;
+  * default_steps sizes from the max distance over the run's fault
+    segments, not just the pristine tables.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import pn_graph, random_faults
+from repro.core.traffic import make_pattern, normalize_demand
+from repro.core.utilization import arc_loads, arc_loads_weighted
+from repro.fabric.model import torus3d_graph
+from repro.sim import (SIM_MAX_CELLS, SimConfig, Simulator, saturation_sweep)
+from repro.sim.kernel import SPARSE_BACKENDS, resolve_dtype
+
+G16 = torus3d_graph(4, 4, 1)
+PN3 = pn_graph(3)
+
+
+def _uniform(g):
+    return normalize_demand(make_pattern("uniform").demand(g, None))
+
+
+def _random_demand(g, seed, density=0.4):
+    rng = np.random.default_rng(seed)
+    dem = rng.random((g.n, g.n)) * (rng.random((g.n, g.n)) < density)
+    np.fill_diagonal(dem, 0.0)
+    for r in np.nonzero(dem.sum(axis=1) == 0)[0]:  # no all-zero rows
+        dem[r, (r + 1) % g.n] = 0.5
+    return normalize_demand(dem)
+
+
+def _histories_close(a, b, rtol, atol=1e-12):
+    for key in ("delivered", "accepted", "offered", "occupancy",
+                "src_backlog", "diverted"):
+        np.testing.assert_allclose(
+            a.history[key], b.history[key], rtol=rtol, atol=atol,
+            err_msg=f"history[{key!r}] diverges")
+
+
+def _run_backend(g, demand, backend, routing="minimal", offered=0.5,
+                 steps=24, buffer=float("inf"), events=None):
+    cfg = SimConfig(routing=routing, backend=backend, dtype="float64",
+                    buffer=buffer)
+    return Simulator(g, cfg, demand=demand).run(demand, offered, steps,
+                                                events=events)
+
+
+# ---------------------------------------------------------------------------
+# numpy vs pallas step parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("routing", ["minimal", "valiant",
+                                     "ugal_threshold(0)"])
+def test_fused_numpy_matches_dense_float64(routing):
+    """The CPU 'pallas' backend (blocked sparse-dest numpy) against the
+    dense oracle, all routing modes, float64: round-off-level identity."""
+    dem = _uniform(G16)
+    a = _run_backend(G16, dem, "numpy", routing, offered=0.7)
+    b = _run_backend(G16, dem, "pallas", routing, offered=0.7)
+    _histories_close(a, b, rtol=1e-9)
+    assert a.residual < 1e-9 and b.residual < 1e-9
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_interpret_kernel_parity_random_demand(seed):
+    """The ACTUAL pallas kernel (interpret mode) against the dense numpy
+    oracle on random demand with finite buffers and a mid-run fault —
+    the ISSUE's property test, float64 end to end."""
+    dem = _random_demand(G16, seed)
+    fs = random_faults(G16, k_links=3, seed=seed)
+    kw = dict(routing="ugal_threshold(0)", offered=0.6, steps=24,
+              buffer=6.0, events=[(8, fs)])
+    a = _run_backend(G16, dem, "numpy", **kw)
+    b = _run_backend(G16, dem, "pallas_interpret", **kw)
+    # the kernel's TPU summation order differs from the dense einsum's;
+    # the threshold rule amplifies that round-off through its diversion
+    # decisions, so float64 agreement is ~1e-8, not 1e-15
+    _histories_close(a, b, rtol=1e-6, atol=1e-9)
+    assert b.residual < 1e-7
+
+
+def test_sparse_dest_compaction_is_exact():
+    """Empty dest columns (a permutation over half the routers) must not
+    change the fluid: compacted sparse-dest run == dense run, and the
+    compaction must actually have happened."""
+    rng = np.random.default_rng(3)
+    sub = rng.choice(G16.n, size=8, replace=False)
+    dem = np.zeros((G16.n, G16.n))
+    dem[sub, np.roll(sub, 1)] = 1.0  # cycle permutation on the subset
+    dem = normalize_demand(dem)
+
+    cfg = SimConfig(routing="minimal", backend="pallas", dtype="float64")
+    sim = Simulator(G16, cfg, demand=dem)
+    assert len(sim.active) == 8  # compacted to the populated columns
+
+    a = _run_backend(G16, dem, "numpy", offered=0.8)
+    b = sim.run(dem, 0.8, 24)
+    _histories_close(a, b, rtol=1e-9)
+
+
+def test_compaction_gated_to_minimal():
+    """ugal spreads diversions over the whole active set; compaction
+    would change the intermediate pool, so it must not trigger."""
+    dem = np.zeros((G16.n, G16.n))
+    dem[0, 1] = dem[1, 0] = 1.0
+    cfg = SimConfig(routing="ugal_threshold(0)", backend="pallas")
+    assert len(Simulator(G16, cfg, demand=dem).active) == G16.n
+
+
+def test_backend_and_dtype_resolution():
+    assert set(SPARSE_BACKENDS) == {"pallas", "pallas_interpret"}
+    assert resolve_dtype("auto", "pallas") == np.float32
+    assert resolve_dtype("auto", "numpy") == np.float64
+    assert resolve_dtype("float32", "numpy") == np.float32
+    with pytest.raises(ValueError):
+        resolve_dtype("bf16", "pallas")
+    # auto escalates to the sparse step above the dense cell cap, and
+    # the sparse backends pass through untouched at any size
+    from repro.sim.engine import pick_backend
+    assert pick_backend("auto", SIM_MAX_CELLS + 1) == "pallas"
+    assert pick_backend("pallas", SIM_MAX_CELLS + 1) == "pallas"
+    assert pick_backend("pallas_interpret", 10) == "pallas_interpret"
+
+
+def test_dense_backend_above_cap_names_the_escape_hatch():
+    g27 = pn_graph(27)  # 1514 routers: 64.2M dense cells > SIM_MAX_CELLS
+    assert g27.n * g27.max_degree * g27.n > SIM_MAX_CELLS
+    with pytest.raises(ValueError, match="pallas"):
+        Simulator(g27, SimConfig(backend="numpy"))
+
+
+# ---------------------------------------------------------------------------
+# utilization: the mask+GEMM kernel engine
+# ---------------------------------------------------------------------------
+
+
+def test_util_pallas_engine_uniform():
+    l0, k0, d0 = arc_loads(PN3, engine="numpy")
+    l1, k1, d1 = arc_loads(PN3, engine="pallas")
+    np.testing.assert_allclose(l1, l0, rtol=1e-12)
+    assert k0 == pytest.approx(k1) and d0 == d1
+
+
+def test_util_pallas_engine_weighted():
+    dem = _random_demand(PN3, 7)
+    l0, k0, d0 = arc_loads_weighted(PN3, dem, engine="numpy")
+    l1, k1, d1 = arc_loads_weighted(PN3, dem, engine="pallas")
+    np.testing.assert_allclose(l1, l0, rtol=1e-12, atol=1e-12)
+    assert k0 == pytest.approx(k1) and d0 == d1
+
+
+def test_util_pallas_engine_targets_mask():
+    mask = np.zeros(PN3.n, dtype=bool)
+    mask[:PN3.n // 2] = True
+    l0, k0, d0 = arc_loads(PN3, targets_mask=mask, engine="numpy")
+    l1, k1, d1 = arc_loads(PN3, targets_mask=mask, engine="pallas")
+    np.testing.assert_allclose(l1, l0, rtol=1e-12, atol=1e-12)
+    assert k0 == pytest.approx(k1) and d0 == d1
+
+
+# ---------------------------------------------------------------------------
+# reporting regressions
+# ---------------------------------------------------------------------------
+
+
+def test_history_normalized_per_fault_segment():
+    """A router-killing event shrinks the surviving demand; each history
+    segment must be in ITS OWN segment's units.  The offered series is
+    then ~constant at the offered load across the event — the pre-event
+    segment used to be inflated by pristine/final."""
+    dem = _uniform(G16)
+    fs = random_faults(G16, k_links=4, k_routers=1, seed=0)
+    cfg = SimConfig(routing="minimal", backend="numpy", dtype="float64")
+    sim = Simulator(G16, cfg, demand=dem)
+    ev_step = 12
+    r = sim.run(dem, 0.5, 30, events=[(ev_step, fs)])
+    offered = r.history["offered"]
+    np.testing.assert_allclose(offered[:ev_step], 0.5, rtol=1e-12)
+    np.testing.assert_allclose(offered[ev_step:], 0.5, rtol=1e-12)
+    # and theta stays in FINAL-state units (comparable to degraded_report)
+    assert r.theta <= 0.5 + 1e-9
+
+
+def test_sweep_curve_includes_all_probes():
+    """A grid placed entirely below the knee: the returned curve must
+    contain the bracket-extension and bisection probes, sorted."""
+    sw = saturation_sweep(G16, "uniform", routing="minimal",
+                          loads=[0.05, 0.1], steps=24, refine=2)
+    assert len(sw.loads) == len(sw.runs) > 2
+    assert np.all(np.diff(sw.loads) >= 0)
+    assert sw.loads.max() > 0.1  # an extension probe made it into the curve
+    for arr in (sw.delivered, sw.latency, sw.alpha):
+        assert len(arr) == len(sw.loads)
+
+
+def test_default_steps_sizes_from_fault_segments():
+    """links[0-1,0-4,4-7,8-12] grows the 4x4 torus diameter 4 -> 5, so a
+    run carrying that event must size longer than the pristine run."""
+    sim = Simulator(G16, SimConfig(), demand=_uniform(G16))
+    fs = random_faults(G16, k_links=4, seed=2)
+    tb, _ = sim._tables_for(fs)
+    assert tb.dist_act.max() > sim.tables.dist_act.max()  # fixture holds
+    assert sim.default_steps(events=[(4, fs)]) > sim.default_steps()
