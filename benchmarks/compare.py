@@ -1,0 +1,179 @@
+"""Regression diff over BENCH JSON artifacts written by benchmarks.run.
+
+Two modes:
+
+* two-file: ``python -m benchmarks.compare BASE.json NEW.json`` — per-entry
+  wall-time and parity (``max_rel_err``) deltas, exit 1 when any entry
+  regresses past the budgets;
+* trajectory: ``python -m benchmarks.compare --dir PATH [--glob 'BENCH_*.json']``
+  — diff every consecutive pair of matching files in sorted order (the
+  stacked-PR perf trajectory), exit 1 if any hop regresses.
+
+Budgets:
+
+* ``--wall-pct P`` (default 50): an entry fails when its wall time grew by
+  more than P percent AND by more than ``--min-seconds`` (default 0.05 s)
+  absolute — the floor keeps microsecond-scale closed-form entries, whose
+  timings are pure scheduler noise, from tripping the gate.
+* ``--err-pct P`` (default 10): an entry fails when ``max_rel_err`` grew by
+  more than P percent of the baseline value and by more than ``--min-err``
+  (default 1e-6) absolute.  Parity regressions are the loud ones: the
+  reproduction drifting from the paper is never timing noise.
+
+Entries present on one side only are reported but never fail the gate
+(sections come and go across PRs); a missing/unparsable file does fail it.
+CI wiring (scripts/ci.sh) snapshots each BENCH file before regenerating it
+and runs the two-file mode against the fresh copy under
+``CI_REGRESSION_PCT``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob as globmod
+import json
+import os
+import sys
+
+__all__ = ["load", "diff_entries", "compare_files", "main"]
+
+
+def load(path: str) -> dict:
+    with open(path) as fh:
+        payload = json.load(fh)
+    if "entries" not in payload:
+        raise ValueError(f"{path}: no 'entries' key — not a benchmarks.run "
+                         f"artifact")
+    return payload
+
+
+def _by_name(payload: dict) -> dict:
+    return {e["name"]: e for e in payload.get("entries", [])}
+
+
+def diff_entries(base: dict, new: dict, wall_pct: float, err_pct: float,
+                 min_seconds: float, min_err: float) -> tuple[list, list]:
+    """Compare two payloads entry-by-entry.
+
+    Returns ``(rows, failures)``: ``rows`` is every comparison (for the
+    report), ``failures`` the subset that breaks a budget.  A row is
+    ``{name, kind, base, new, delta_pct}`` with kind "wall" or "err"."""
+    b, n = _by_name(base), _by_name(new)
+    rows, failures = [], []
+    for name in sorted(set(b) | set(n)):
+        if name not in b or name not in n:
+            rows.append({"name": name, "kind": "presence",
+                         "base": name in b, "new": name in n,
+                         "delta_pct": None})
+            continue
+        eb, en = b[name], n[name]
+        sb, sn = float(eb.get("seconds", 0.0)), float(en.get("seconds", 0.0))
+        if sb > 0:
+            pct = 100.0 * (sn - sb) / sb
+            row = {"name": name, "kind": "wall", "base": sb, "new": sn,
+                   "delta_pct": pct}
+            rows.append(row)
+            if pct > wall_pct and (sn - sb) > min_seconds:
+                failures.append(row)
+        if "max_rel_err" in eb and "max_rel_err" in en:
+            vb, vn = float(eb["max_rel_err"]), float(en["max_rel_err"])
+            pct = (100.0 * (vn - vb) / vb if vb > 0
+                   else (float("inf") if vn > min_err else 0.0))
+            row = {"name": name, "kind": "err", "base": vb, "new": vn,
+                   "delta_pct": pct}
+            rows.append(row)
+            if pct > err_pct and (vn - vb) > min_err:
+                failures.append(row)
+    return rows, failures
+
+
+def _fmt(row: dict) -> str:
+    if row["kind"] == "presence":
+        side = "baseline only" if row["base"] else "new only"
+        return f"  ~ {row['name']:40s} ({side})"
+    unit = "s" if row["kind"] == "wall" else ""
+    mark = "!" if row.get("_failed") else " "
+    return (f"  {mark} {row['name']:40s} {row['kind']:4s} "
+            f"{row['base']:10.4g}{unit} -> {row['new']:10.4g}{unit} "
+            f"({row['delta_pct']:+8.1f}%)")
+
+
+def compare_files(base_path: str, new_path: str, wall_pct: float,
+                  err_pct: float, min_seconds: float, min_err: float,
+                  verbose: bool = False) -> int:
+    base, new = load(base_path), load(new_path)
+    rows, failures = diff_entries(base, new, wall_pct, err_pct,
+                                  min_seconds, min_err)
+    for row in failures:
+        row["_failed"] = True
+    rb, rn = base.get("git_rev"), new.get("git_rev")
+    rev = f" [{rb or '?'} -> {rn or '?'}]" if (rb or rn) else ""
+    print(f"compare {os.path.basename(base_path)} -> "
+          f"{os.path.basename(new_path)}{rev}: "
+          f"{len(failures)} regression(s) "
+          f"(budgets: wall +{wall_pct:g}%, err +{err_pct:g}%)")
+    shown = rows if verbose else [r for r in rows
+                                  if r.get("_failed")
+                                  or r["kind"] == "presence"]
+    for row in shown:
+        print(_fmt(row))
+    new_errors = new.get("errors") or []
+    if new_errors:
+        print(f"  ! {len(new_errors)} crashed section(s) in "
+              f"{os.path.basename(new_path)}: "
+              f"{[e.get('section') for e in new_errors]}")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="BASE.json NEW.json (two-file mode)")
+    ap.add_argument("--dir", default=None, metavar="PATH",
+                    help="trajectory mode: diff consecutive sorted files "
+                         "matching --glob under PATH")
+    ap.add_argument("--glob", default="BENCH_*.json",
+                    help="filename pattern for --dir (default BENCH_*.json)")
+    ap.add_argument("--wall-pct", type=float, default=50.0, metavar="P",
+                    help="fail an entry whose wall time grew >P%% (default "
+                         "50; shared-VM timings are noisy — budget "
+                         "generously)")
+    ap.add_argument("--err-pct", type=float, default=10.0, metavar="P",
+                    help="fail an entry whose max_rel_err grew >P%% "
+                         "(default 10)")
+    ap.add_argument("--min-seconds", type=float, default=0.05, metavar="S",
+                    help="absolute wall-growth floor below which the pct "
+                         "budget never trips (default 0.05)")
+    ap.add_argument("--min-err", type=float, default=1e-6, metavar="E",
+                    help="absolute max_rel_err growth floor (default 1e-6)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every entry, not just regressions")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.dir:
+            if args.paths:
+                ap.error("--dir and positional paths are mutually exclusive")
+            files = sorted(globmod.glob(os.path.join(args.dir, args.glob)))
+            if len(files) < 2:
+                print(f"# fewer than 2 files match {args.glob!r} under "
+                      f"{args.dir} — nothing to compare")
+                return 0
+            rc = 0
+            for a, b in zip(files, files[1:]):
+                rc |= compare_files(a, b, args.wall_pct, args.err_pct,
+                                    args.min_seconds, args.min_err,
+                                    verbose=args.verbose)
+            return rc
+        if len(args.paths) != 2:
+            ap.error("need exactly BASE.json NEW.json (or --dir PATH)")
+        return compare_files(args.paths[0], args.paths[1], args.wall_pct,
+                             args.err_pct, args.min_seconds, args.min_err,
+                             verbose=args.verbose)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"# compare failed: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

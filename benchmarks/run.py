@@ -28,10 +28,27 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import subprocess
 import sys
 import time
 import traceback
+
+# bump when the JSON payload layout changes; benchmarks/compare.py reads it
+SCHEMA_VERSION = 2
+
+
+def _git_rev() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else None
+    except Exception:
+        return None
 
 
 def _run(records, name, fn, derive, err_of=None):
@@ -67,17 +84,36 @@ def main(argv=None) -> None:
                     help="fail (exit 1) when any entry's max_rel_err exceeds "
                          "E instead of only recording it (negative: record "
                          "only)")
+    ap.add_argument("--obs", choices=["none", "metrics", "trace"],
+                    default="trace",
+                    help="per-section repro.obs capture embedded under "
+                         "'obs' in the JSON payload (default: trace with "
+                         "per-step series capture OFF, so span/counter "
+                         "recording stays out of the hot loops)")
     args = ap.parse_args(argv)
 
     records: list[dict] = []
     errors: list[dict] = []
+    obs_by_section: dict[str, dict] = {}
     print("name,us_per_call,derived")
 
     def section(name, body):
         """Run one bench section; a crash is reported and recorded but
-        never takes the other sections (or the JSON artifact) with it."""
+        never takes the other sections (or the JSON artifact) with it.
+        Each section gets its own obs session so the embedded span/metric
+        snapshot attributes the work to the section that did it."""
         try:
-            body()
+            if args.obs == "none":
+                body()
+                return
+            from repro import obs
+            with obs.session(mode=args.obs, series=False) as sess:
+                try:
+                    body()
+                finally:
+                    snap = sess.snapshot()
+                    if snap is not None:
+                        obs_by_section[name] = snap
         except Exception as e:
             print(f"# SECTION FAILED [{name}]: {type(e).__name__}: {e}",
                   file=sys.stderr)
@@ -241,6 +277,8 @@ def main(argv=None) -> None:
     if args.json:
         from repro.perf import flags
         payload = {
+            "schema_version": SCHEMA_VERSION,
+            "git_rev": _git_rev(),
             "machine": platform.machine(),
             "python": platform.python_version(),
             "util_engine": flags().util_engine,
@@ -248,6 +286,8 @@ def main(argv=None) -> None:
             "entries": records,
             "errors": errors,
         }
+        if obs_by_section:
+            payload["obs"] = obs_by_section
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {args.json} ({len(records)} entries, "

@@ -12,8 +12,10 @@ Examples:
 """
 
 import argparse
+import contextlib
 import re
 
+from repro import obs
 from repro.core import (DirectNetworkSpec, build_topology, cable_split,
                         dollars_per_node, electrical_groups, saturation_report,
                         utilization, watts_per_node)
@@ -150,22 +152,39 @@ def main():
     ap.add_argument("--sim-steps", type=int, default=None, metavar="N",
                     help="simulator steps per load point (default: sized "
                          "from the topology's diameter)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a repro.obs trace of the whole run and "
+                         "write it as Chrome-trace JSON (load in "
+                         "chrome://tracing or ui.perfetto.dev); also prints "
+                         "the top-5 spans by total time")
     args = ap.parse_args()
-    if args.topology:
-        g = inspect(args.topology, args.param, args.delta0)
-        if args.patterns:
+    sess_cm = (obs.session(mode="trace") if args.trace
+               else contextlib.nullcontext(None))
+    with sess_cm as sess:
+        if args.topology:
+            g = inspect(args.topology, args.param, args.delta0)
+            if args.patterns:
+                print()
+                # split on commas outside parentheses: hot_region(0.2,4)
+                # is one spec
+                specs = [s.strip() for s in
+                         re.split(r",(?![^(]*\))", args.patterns)
+                         if s.strip()]
+                patterns_table(g, specs, routing=args.routing, sim=args.sim,
+                               sim_steps=args.sim_steps)
+        if args.compare:
+            compare(args.compare, args.radix)
+        if not args.topology and not args.compare:
+            inspect("demi_pn", 27, None)   # the paper's 10k-node case
             print()
-            # split on commas outside parentheses: hot_region(0.2,4) is one spec
-            specs = [s.strip() for s in
-                     re.split(r",(?![^(]*\))", args.patterns) if s.strip()]
-            patterns_table(g, specs, routing=args.routing, sim=args.sim,
-                           sim_steps=args.sim_steps)
-    if args.compare:
-        compare(args.compare, args.radix)
-    if not args.topology and not args.compare:
-        inspect("demi_pn", 27, None)   # the paper's 10k-node case
-        print()
-        compare(10_000, 48)
+            compare(10_000, 48)
+    if args.trace and sess is not None and sess.enabled:
+        sess.write_chrome(args.trace)
+        print(f"\ntrace written to {args.trace} "
+              f"({len(sess.events)} spans)")
+        print("top spans by total time:")
+        for name, total_s, count in sess.top_spans(5):
+            print(f"  {name:32s} {count:6d}x  total {total_s*1e3:9.2f} ms")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,22 @@ PLACEMENT_BUDGET="${CI_PLACEMENT_BUDGET:-300}" # seconds
 SIM_BUDGET="${CI_SIM_BUDGET:-900}"             # seconds
 FAULT_BUDGET="${CI_FAULT_BUDGET:-600}"         # seconds
 KERNEL_BUDGET="${CI_KERNEL_BUDGET:-600}"       # seconds
+# wall-time regression budget (percent) for benchmarks.compare against the
+# previous BENCH artifact; shared-VM timings swing 2-3x run to run, so the
+# default only catches order-of-magnitude blowups — parity (max_rel_err)
+# regressions stay on compare's tight default budget regardless
+REGRESSION_PCT="${CI_REGRESSION_PCT:-250}"
+
+snapshot_bench() {  # keep the previous artifact so the fresh run has a baseline
+    if [[ -f "$1" ]]; then cp "$1" "$1.base"; fi
+}
+compare_bench() {   # diff fresh vs baseline; a regression fails the build here
+    if [[ -f "$1.base" ]]; then
+        python -m benchmarks.compare "$1.base" "$1" \
+            --wall-pct "$REGRESSION_PCT"
+        rm -f "$1.base"
+    fi
+}
 
 echo "== tier-1 (budget ${TIER1_BUDGET}s) =="
 timeout "$TIER1_BUDGET" python -m pytest -x -q
@@ -45,6 +61,7 @@ timeout "$SLOW_BUDGET" python -m pytest -q -m slow \
     "tests/test_system.py::test_zero1_single_device_parity"
 
 echo "== benchmarks: paper tables + traffic sweep -> BENCH_2.json (budget ${BENCH_BUDGET}s) =="
+snapshot_bench BENCH_2.json
 timeout "$BENCH_BUDGET" python -m benchmarks.run --json BENCH_2.json --only tables
 timeout "$BENCH_BUDGET" python -m benchmarks.run --json BENCH_2_traffic.json --only traffic
 python - <<'EOF'
@@ -59,35 +76,46 @@ import os; os.remove("BENCH_2_traffic.json")
 print(f"BENCH_2.json: {len(tables['entries'])} entries, "
       f"{tables['total_seconds']:.1f}s total")
 EOF
+compare_bench BENCH_2.json
 
 echo "== benchmarks: adversarial routing table -> BENCH_3.json (budget ${ROUTING_BUDGET}s) =="
+snapshot_bench BENCH_3.json
 timeout "$ROUTING_BUDGET" python -m benchmarks.run --json BENCH_3.json --only routing
+compare_bench BENCH_3.json
 
 echo "== benchmarks: placement strategy/fragmentation table -> BENCH_4.json (budget ${PLACEMENT_BUDGET}s) =="
 # benchmarks.run exits nonzero when the pipeline identities break (the
 # best non-linear strategy below the linear baseline on ep_heavy, packed
 # losing where it must win, or pn16's ep_heavy search not strictly
 # beating linear), mirroring the routing bench
+snapshot_bench BENCH_4.json
 timeout "$PLACEMENT_BUDGET" python -m benchmarks.run --json BENCH_4.json --only placement
+compare_bench BENCH_4.json
 
 echo "== benchmarks: simulator parity table -> BENCH_5.json (budget ${SIM_BUDGET}s) =="
 # benchmarks.run exits nonzero when any row's parity gap (measured vs
 # fluid theta) or band violation (threshold-UGAL outside the
 # [theta_minimal, theta_ugal] bracket) exceeds --err-budget
+snapshot_bench BENCH_5.json
 timeout "$SIM_BUDGET" python -m benchmarks.run --json BENCH_5.json --only sim
+compare_bench BENCH_5.json
 
 echo "== benchmarks: fault degradation curves -> BENCH_6.json (budget ${FAULT_BUDGET}s) =="
 # benchmarks.run exits nonzero when any degradation curve is not monotone
 # non-increasing in k (relative violation > --err-budget) or the
 # static-vs-dynamic sim fault parity row's knee gap blows the budget
+snapshot_bench BENCH_6.json
 timeout "$FAULT_BUDGET" python -m benchmarks.run --json BENCH_6.json --only faults
+compare_bench BENCH_6.json
 
 echo "== benchmarks: fused step kernel rows -> BENCH_7.json (budget ${KERNEL_BUDGET}s) =="
 # the fused sparse-dest sim backend: pn16 step timings + the 10x sweep
 # acceptance row + the PN(27) past-the-dense-cap sweep.  --err-budget
 # 0.025 is the ISSUE's 2.5% knee-parity bound — benchmarks.run exits
 # nonzero when any row's measured theta drifts further from analytic
+snapshot_bench BENCH_7.json
 timeout "$KERNEL_BUDGET" python -m benchmarks.run --json BENCH_7.json \
     --only kernels --err-budget 0.025
+compare_bench BENCH_7.json
 
 echo "== ci.sh green =="

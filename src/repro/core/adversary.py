@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import obs
 from .graph import Graph
 from .routing import evaluate_models, make_routing
 from .traffic import make_pattern, normalize_demand
@@ -107,16 +108,22 @@ def _evaluate_specs(g, specs, models, engine, targets_mask, faults=None):
                              "faults")
         out = {}
         for spec in specs:
-            demand = normalize_demand(make_pattern(spec).demand(g, mask))
-            dem = faults.restrict_demand(g, demand)
-            if dem.sum() <= 0:
-                raise ValueError(f"faults removed every demand of {spec!r}")
-            out[spec] = evaluate_models(gd, dem, act_d, models, engine)
+            obs.counter("adversary.candidates").add(1.0)
+            with obs.span("adversary.candidate", pattern=str(spec),
+                          faulted=True):
+                demand = normalize_demand(make_pattern(spec).demand(g, mask))
+                dem = faults.restrict_demand(g, demand)
+                if dem.sum() <= 0:
+                    raise ValueError(
+                        f"faults removed every demand of {spec!r}")
+                out[spec] = evaluate_models(gd, dem, act_d, models, engine)
         return out
     out = {}
     for spec in specs:
-        demand = normalize_demand(make_pattern(spec).demand(g, mask))
-        out[spec] = evaluate_models(g, demand, active, models, engine)
+        obs.counter("adversary.candidates").add(1.0)
+        with obs.span("adversary.candidate", pattern=str(spec)):
+            demand = normalize_demand(make_pattern(spec).demand(g, mask))
+            out[spec] = evaluate_models(g, demand, active, models, engine)
     return out
 
 
@@ -130,8 +137,10 @@ def worst_case(g: Graph, model="minimal",
     of a wounded fabric."""
     named, randoms = _candidate_specs(patterns, n_random, seed)
     spec = make_routing(model)  # validate before paying for sweeps
-    results = _evaluate_specs(g, named + randoms, [model], engine,
-                              targets_mask, faults=faults)
+    with obs.span("adversary.search", routing=spec.name,
+                  candidates=len(named) + len(randoms)):
+        results = _evaluate_specs(g, named + randoms, [model], engine,
+                                  targets_mask, faults=faults)
     thetas = {s: 1.0 / r[model].max_load for s, r in results.items()}
     alphas = {s: r[model].alpha for s, r in results.items()}
     worst = min(thetas, key=thetas.get)

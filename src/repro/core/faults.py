@@ -53,6 +53,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import obs
 from .graph import Graph, bfs_distances
 from .routing import make_routing
 
@@ -312,7 +313,19 @@ def targeted_faults(g: Graph, k: int, kind: str = "links",
     model = make_routing(routing)
     links: list = []
     routers: list = []
+    with obs.span("faults.targeted", kind=kind, k=k, routing=routing):
+        _targeted_rounds(g, k, kind, demand, mask, model, engine,
+                         require_connected, links, routers)
+    return FaultSet(links=tuple(links), routers=tuple(routers))
+
+
+def _targeted_rounds(g, k, kind, demand, mask, model, engine,
+                     require_connected, links, routers):
+    """The greedy kill-the-busiest rounds of :func:`targeted_faults`,
+    mutating ``links``/``routers`` in place (one round per counter
+    tick)."""
     for _ in range(k):
+        obs.counter("faults.targeted_rounds").add(1.0)
         fs = FaultSet(links=tuple(links), routers=tuple(routers))
         gd = fs.apply(g) if not fs.empty else g
         dem = fs.restrict_demand(g, demand)
@@ -347,7 +360,6 @@ def targeted_faults(g: Graph, k: int, kind: str = "links",
                 f"every remaining {kind[:-1]} cut disconnects "
                 f"{g.name or 'the graph'} after {len(links) + len(routers)} "
                 f"removals")
-    return FaultSet(links=tuple(links), routers=tuple(routers))
 
 
 # ---------------------------------------------------------------------------
@@ -460,23 +472,27 @@ def degradation_sweep(g: Graph, k_failures=(0, 1, 2, 5), trials: int = 8,
     if targets_mask is None:
         targets_mask = g.meta.get("leaf_mask")
     from .traffic import saturation_report
-    pristine = saturation_report(g, pattern, routing=routing, engine=engine,
-                                 targets_mask=targets_mask).theta
-    thetas = np.empty((int(trials), len(ks)), dtype=np.float64)
-    for t in range(int(trials)):
-        rng = np.random.default_rng(np.random.SeedSequence([int(seed), t]))
-        perm = _nested_draw(g, ks, kind, rng, max_tries)
-        for j, k in enumerate(ks):
-            if k == 0:
-                thetas[t, j] = pristine
-                continue
-            if kind == "links":
-                fs = FaultSet(links=_links_from_edges(g, perm[:k]))
-            else:
-                fs = FaultSet(routers=tuple(int(v) for v in perm[:k]))
-            thetas[t, j] = degraded_report(
-                g, pattern, fs, routing=routing, engine=engine,
-                targets_mask=targets_mask).theta
+    with obs.span("faults.degradation_sweep", kind=kind,
+                  routing=routing, trials=int(trials), k_max=ks[-1]):
+        pristine = saturation_report(g, pattern, routing=routing,
+                                     engine=engine,
+                                     targets_mask=targets_mask).theta
+        thetas = np.empty((int(trials), len(ks)), dtype=np.float64)
+        for t in range(int(trials)):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([int(seed), t]))
+            perm = _nested_draw(g, ks, kind, rng, max_tries)
+            for j, k in enumerate(ks):
+                if k == 0:
+                    thetas[t, j] = pristine
+                    continue
+                if kind == "links":
+                    fs = FaultSet(links=_links_from_edges(g, perm[:k]))
+                else:
+                    fs = FaultSet(routers=tuple(int(v) for v in perm[:k]))
+                thetas[t, j] = degraded_report(
+                    g, pattern, fs, routing=routing, engine=engine,
+                    targets_mask=targets_mask).theta
     bands = {int(p): np.percentile(thetas, p, axis=0) for p in percentiles}
     return DegradationSweep(
         pattern=str(pattern), routing=str(routing), kind=kind, k_failures=ks,

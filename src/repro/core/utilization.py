@@ -61,6 +61,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .. import obs
 from ..perf import flags
 from .graph import Graph, bfs_distances
 
@@ -954,9 +955,12 @@ def _exact_engine(g: Graph):
     the memory-lean CSR sweep."""
     fl = flags()
     if g.n <= fl.util_dense_max:
+        obs.counter("util.engine[numpy]").add(1.0)
         return _loads_numpy
     if _jax_available() and g.n <= fl.util_jax_max:
+        obs.counter("util.engine[jax]").add(1.0)
         return _loads_jax
+    obs.counter("util.engine[csr]").add(1.0)
     return _loads_csr
 
 
@@ -983,31 +987,39 @@ def arc_loads(g: Graph, sources=None, targets_mask: np.ndarray | None = None,
     if eng not in _ENGINES:
         raise ValueError(f"unknown engine {eng!r}; options: {_ENGINES}")
 
-    if eng == "naive":
-        res = _arc_loads_naive(g, sources, targets_mask)
-    elif eng == "orbit" or (eng == "auto" and flags().util_orbits and default_sources):
-        res = _loads_orbit(g, targets_mask, _exact_engine(g)) if default_sources else None
-        if res is None:
-            if eng == "orbit":
-                raise ValueError(
-                    f"no known automorphism generators for {g.name or g.meta.get('family')!r}"
-                    " (or sources/targets not orbit-compatible)")
+    with obs.span("util.arc_loads", engine=eng, n=g.n):
+        obs.counter(f"util.dispatch[{eng}]").add(1.0)
+        if eng == "naive":
+            res = _arc_loads_naive(g, sources, targets_mask)
+        elif eng == "orbit" or (eng == "auto" and flags().util_orbits
+                                and default_sources):
+            res = (_loads_orbit(g, targets_mask, _exact_engine(g))
+                   if default_sources else None)
+            if res is None:
+                if eng == "orbit":
+                    raise ValueError(
+                        f"no known automorphism generators for "
+                        f"{g.name or g.meta.get('family')!r}"
+                        " (or sources/targets not orbit-compatible)")
+                res = _exact_engine(g)(g, sources, targets_mask)
+            else:
+                obs.counter("util.engine[orbit]").add(1.0)
+        elif eng == "numpy":
+            res = _loads_numpy(g, sources, targets_mask)
+        elif eng == "csr":
+            res = _loads_csr(g, sources, targets_mask)
+        elif eng == "jax":
+            if not _jax_available():
+                raise RuntimeError(
+                    "engine='jax' requested but jax is not importable")
+            res = _loads_jax(g, sources, targets_mask)
+        elif eng == "pallas":
+            if not _jax_available():
+                raise RuntimeError(
+                    "engine='pallas' requested but jax is not importable")
+            res = _loads_pallas(g, sources, targets_mask)
+        else:  # auto, orbits disabled or explicit sources
             res = _exact_engine(g)(g, sources, targets_mask)
-    elif eng == "numpy":
-        res = _loads_numpy(g, sources, targets_mask)
-    elif eng == "csr":
-        res = _loads_csr(g, sources, targets_mask)
-    elif eng == "jax":
-        if not _jax_available():
-            raise RuntimeError("engine='jax' requested but jax is not importable")
-        res = _loads_jax(g, sources, targets_mask)
-    elif eng == "pallas":
-        if not _jax_available():
-            raise RuntimeError(
-                "engine='pallas' requested but jax is not importable")
-        res = _loads_pallas(g, sources, targets_mask)
-    else:  # auto, orbits disabled or explicit sources
-        res = _exact_engine(g)(g, sources, targets_mask)
 
     loads, dist_sum, pair_count, diam = res
     kbar = dist_sum / pair_count
@@ -1093,23 +1105,26 @@ def arc_loads_weighted(g: Graph, demand,
             else:
                 return loads * w, kbar, diam
 
-    if eng == "naive":
-        res = _arc_loads_naive(g, sources, targets_mask, demand)
-    elif eng == "numpy":
-        res = _loads_numpy(g, sources, targets_mask, demand)
-    elif eng == "csr":
-        res = _loads_csr(g, sources, targets_mask, demand)
-    elif eng == "jax":
-        if not _jax_available():
-            raise RuntimeError("engine='jax' requested but jax is not importable")
-        res = _loads_jax(g, sources, targets_mask, demand)
-    elif eng == "pallas":
-        if not _jax_available():
-            raise RuntimeError(
-                "engine='pallas' requested but jax is not importable")
-        res = _loads_pallas(g, sources, targets_mask, demand)
-    else:  # auto / orbit: the exact-path choice by graph size
-        res = _exact_engine(g)(g, sources, targets_mask, demand)
+    with obs.span("util.arc_loads_weighted", engine=eng, n=g.n):
+        obs.counter(f"util.dispatch[{eng}]").add(1.0)
+        if eng == "naive":
+            res = _arc_loads_naive(g, sources, targets_mask, demand)
+        elif eng == "numpy":
+            res = _loads_numpy(g, sources, targets_mask, demand)
+        elif eng == "csr":
+            res = _loads_csr(g, sources, targets_mask, demand)
+        elif eng == "jax":
+            if not _jax_available():
+                raise RuntimeError(
+                    "engine='jax' requested but jax is not importable")
+            res = _loads_jax(g, sources, targets_mask, demand)
+        elif eng == "pallas":
+            if not _jax_available():
+                raise RuntimeError(
+                    "engine='pallas' requested but jax is not importable")
+            res = _loads_pallas(g, sources, targets_mask, demand)
+        else:  # auto / orbit: the exact-path choice by graph size
+            res = _exact_engine(g)(g, sources, targets_mask, demand)
 
     loads, dist_sum, total_demand, diam = res
     return loads, dist_sum / total_demand, diam

@@ -45,6 +45,7 @@ from typing import Callable
 
 import numpy as np
 
+from .. import obs
 from ..core import Graph
 from ..core.routing import make_routing, parse_spec
 from .collectives import RING_OPS, SPREAD_OPS, bytes_on_wire
@@ -433,19 +434,27 @@ def _swap_descent(p: Placement, demand_of, iters: int, seed: int,
         return float(model.evaluate(g, d, active, engine).loads.max())
 
     cur = p.router_of.copy()
-    best = objective(cur)
-    history = [best]
-    pairs = np.random.default_rng(seed).integers(0, p.n_chips, (iters, 2))
-    for i, j in pairs:
-        if cur[i] == cur[j] or best == 0.0:
+    with obs.span("placement.greedy_swap", iters=int(iters),
+                  chips=int(p.n_chips), routing=str(routing)) as sp:
+        evals = obs.counter("placement.swap_evals")
+        accepts = obs.counter("placement.swap_accepted")
+        best = objective(cur)
+        history = [best]
+        pairs = np.random.default_rng(seed).integers(0, p.n_chips,
+                                                     (iters, 2))
+        for i, j in pairs:
+            if cur[i] == cur[j] or best == 0.0:
+                history.append(best)
+                continue
+            cand = cur.copy()
+            cand[i], cand[j] = cand[j], cand[i]
+            evals.add(1.0)
+            m = objective(cand)
+            if m < best:
+                accepts.add(1.0)
+                best, cur = m, cand
             history.append(best)
-            continue
-        cand = cur.copy()
-        cand[i], cand[j] = cand[j], cand[i]
-        m = objective(cand)
-        if m < best:
-            best, cur = m, cand
-        history.append(best)
+        sp.set(best=best)
     return (Placement(g, p.mesh_shape, p.axis_names, cur), best, history)
 
 

@@ -12,11 +12,11 @@ per-family caches.)
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
+from .. import obs
 from ..configs import ARCHS, get_arch
 from ..models import build, unbox
 from ..serve.engine import Engine, ServeConfig
@@ -44,9 +44,13 @@ def main():
         plen = int(rng.integers(4, min(24, args.max_len // 2)))
         eng.submit(rng.integers(0, cfg.vocab, plen).astype(np.int32),
                    max_new=args.max_new)
-    t0 = time.perf_counter()
-    results = eng.run()
-    dt = time.perf_counter() - t0
+    # the engine's decode loop dispatches jax work asynchronously; close
+    # the bracket only after the returned tokens have landed on the host,
+    # else tok/s over-reports (the old perf_counter pair did exactly that)
+    with obs.timed("serve.run", requests=args.requests) as sp:
+        results = eng.run()
+        sp.sync(results)
+    dt = sp.seconds
     n_tok = sum(len(v) for v in results.values())
     for rid in sorted(results)[:4]:
         print(f"req {rid}: {results[rid]}")

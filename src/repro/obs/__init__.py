@@ -1,0 +1,152 @@
+"""repro.obs — zero-dependency tracing, metrics, and telemetry for the
+fabric stack.
+
+Three faces (see docs/observability.md for the full taxonomy):
+
+* **tracing** — ``with obs.span("sim.sweep", pattern=...):`` records
+  nestable wall-time spans into the active session, exported as
+  Chrome-trace/Perfetto JSON (``Session.write_chrome``) or JSONL
+  (``write_jsonl``).  The hot seams are pre-instrumented: utilization
+  engine dispatch, routing solves (incl. ``blend_optimum`` probe
+  counts), ``saturation_sweep`` bracket/bisection probes, placement
+  ``greedy_swap``, fault surgery, and the sim backend dispatch.
+* **metrics** — ``obs.counter("sim.delivered").add(x)`` etc. against the
+  session's :class:`MetricsRegistry`; the simulator publishes its
+  conservation counters (bit-exact with ``SimRun``'s own accounting)
+  and the per-link utilization balance statistics
+  (:func:`balance_stats` — the paper's balanced-utilization thesis,
+  measured).
+* **export** — ``Session.snapshot()`` is the stable JSON schema
+  ``benchmarks/run.py`` embeds per BENCH section and
+  ``benchmarks/compare.py`` diffs across a trajectory.
+
+Everything is off by default: with no active session every helper
+returns a shared no-op singleton (one module-global read per call — no
+allocation, no branches in the caller), and the ``obs`` perf flag
+(``REPRO_PERF=obs=trace``) only selects the default mode of
+``obs.session()`` — nothing records until a session is entered:
+
+    from repro import obs
+    with obs.session(mode="trace") as sess:
+        sweep = sim.saturation_sweep(g, "tornado", routing="ugal")
+        sess.write_chrome("trace.json")
+        print(sess.top_spans())
+
+``obs.timed(name)`` is the exception to "off means free": it always
+measures (and only *records* under tracing), and its ``sync()`` hook
+blocks on registered jax values before closing — the correct way to
+time async-dispatched device work (used by repro.train.trainer and
+repro.launch.serve).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, Series,
+                      balance_stats)
+from .trace import NULL_SESSION, NULL_SPAN, Session, Span
+
+__all__ = [
+    "Session", "Span", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "Series", "balance_stats", "session", "current", "span", "timed",
+    "counter", "gauge", "histogram", "series", "NULL_SPAN", "NULL_SESSION",
+]
+
+# innermost active session last; module-global so the fast path is one
+# attribute load + truth test
+_STACK: list = []
+
+
+def current():
+    """The innermost active :class:`Session`, or None."""
+    return _STACK[-1] if _STACK else None
+
+
+@contextmanager
+def session(mode: str | None = None, registry: MetricsRegistry | None = None,
+            series: bool | None = None):
+    """Enter an observability session.  ``mode`` None resolves from the
+    ``obs`` perf flag (``REPRO_PERF=obs=none|metrics|trace``); mode
+    ``none`` yields the inert :data:`NULL_SESSION` without installing
+    anything.  ``series`` forces per-step series capture on/off (default:
+    on only under ``trace`` — the per-step host work is the expensive
+    part; see docs/observability.md)."""
+    if mode is None:
+        from ..perf import flags
+        mode = flags().obs
+    if mode in (None, "", "none", "off", False, 0):
+        yield NULL_SESSION
+        return
+    s = Session(mode, registry, series=series)
+    _STACK.append(s)
+    try:
+        yield s
+    finally:
+        _STACK.remove(s)
+
+
+class _NullMetric:
+    """Accepts every metric verb, does nothing; handed out when no
+    session is active so call sites never branch."""
+
+    __slots__ = ()
+    value = 0.0
+    values: list = []
+
+    def add(self, v: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def observe_many(self, values) -> None:
+        pass
+
+    def append(self, v: float) -> None:
+        pass
+
+
+NULL_METRIC = _NullMetric()
+
+
+def span(name: str, **attrs):
+    """A tracing span: real when the active session traces, the shared
+    :data:`NULL_SPAN` singleton otherwise (the no-op fast path)."""
+    s = _STACK[-1] if _STACK else None
+    if s is None or s.mode != "trace":
+        return NULL_SPAN
+    return Span(name, attrs, s)
+
+
+def timed(name: str, **attrs) -> Span:
+    """A span that ALWAYS measures (``.seconds`` valid with obs off) and
+    records only under tracing.  ``.sync(*jax_values)`` defers the end
+    timestamp past ``block_until_ready`` — use this to time
+    async-dispatched device work."""
+    s = _STACK[-1] if _STACK else None
+    return Span(name, attrs, s if (s is not None and s.mode == "trace")
+                else None)
+
+
+def counter(name: str):
+    s = _STACK[-1] if _STACK else None
+    return NULL_METRIC if s is None else s.metrics.counter(name)
+
+
+def gauge(name: str):
+    s = _STACK[-1] if _STACK else None
+    return NULL_METRIC if s is None else s.metrics.gauge(name)
+
+
+def histogram(name: str):
+    s = _STACK[-1] if _STACK else None
+    return NULL_METRIC if s is None else s.metrics.histogram(name)
+
+
+def series(name: str):
+    s = _STACK[-1] if _STACK else None
+    return NULL_METRIC if s is None else s.metrics.series(name)

@@ -58,6 +58,13 @@ Topology-analytics flags (the batched all-source BFS/Brandes engine behind
 
 e.g. ``REPRO_PERF="util_engine=naive" python -m benchmarks.run`` times the
 paper tables on the reference implementation.
+
+Observability (repro.obs):
+  obs=MODE      — default mode for ``obs.session()`` calls that do not
+                  pin one: ``none`` (default; spans/counters are shared
+                  no-op singletons), ``metrics``, or ``trace``
+                  (Chrome-trace spans + metrics).  See
+                  docs/observability.md.
 """
 
 from __future__ import annotations
@@ -130,6 +137,13 @@ class PerfFlags:
     # runs the actual kernel through the pallas interpreter (parity
     # testing).  SimConfig(backend=...) overrides per run.
     sim_backend: str = "auto"
+    # Observability default mode for repro.obs sessions opened without an
+    # explicit mode: none (off — every span/counter helper returns a
+    # shared no-op singleton, the hot paths pay one global read), metrics
+    # (counters/gauges/histograms), or trace (spans too, exportable as
+    # Chrome-trace JSON).  Nothing records until obs.session() is
+    # entered; REPRO_PERF=obs=trace makes every such session trace.
+    obs: str = "none"
 
 
 _FLAGS = PerfFlags()

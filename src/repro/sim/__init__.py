@@ -41,8 +41,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import obs
 from ..core.graph import Graph
 from ..core.traffic import make_pattern, normalize_demand, saturation_report
+from ..obs import balance_stats
 from .engine import (SIM_JAX_MIN_WORK, SIM_MAX_CELLS, SimConfig, SimState,
                      init_state, make_step, parse_sim_routing, pick_backend)
 from .faults import FaultEvent, apply_fault_surgery, normalize_events
@@ -176,8 +178,11 @@ class Simulator:
         # backends default to float32, the TPU-native dtype, with the
         # dense float64 path as their parity oracle
         self.dtype = resolve_dtype(config.dtype, self.backend)
-        self.tables = build_tables(g, self.active, dtype=self.dtype)
-        self._step = self._make_step(self.tables)
+        with obs.span("sim.build_tables", backend=self.backend, n=g.n,
+                      dests=len(self.active)):
+            self.tables = build_tables(g, self.active, dtype=self.dtype)
+            self._step = self._make_step(self.tables)
+        obs.counter(f"sim.backend[{self.backend}]").add(1.0)
         # fault-state label -> (tables, compiled step); one compile per
         # distinct fault state serves every run and every load probe
         self._fault_cache: dict = {}
@@ -195,9 +200,10 @@ class Simulator:
             return self.tables, self._step
         key = fs.label
         if key not in self._fault_cache:
-            tb = build_tables(self.g, self.active, dtype=self.dtype,
-                              faults=fs)
-            self._fault_cache[key] = (tb, self._make_step(tb))
+            with obs.span("sim.fault_tables", label=key):
+                tb = build_tables(self.g, self.active, dtype=self.dtype,
+                                  faults=fs)
+                self._fault_cache[key] = (tb, self._make_step(tb))
         return self._fault_cache[key]
 
     def default_steps(self, events=None) -> int:
@@ -232,7 +238,21 @@ class Simulator:
         static fault (one event at step 0) is directly comparable to the
         analytic ``degraded_report`` theta.  Mind the window: trailing
         measurements should sit after the last event to read steady
-        state."""
+        state.
+
+        Under an active :mod:`repro.obs` session the run publishes its
+        conservation counters (``sim.injected`` / ``sim.delivered`` /
+        ``sim.accepted`` / ``sim.diverted`` / ``sim.dropped`` — the SAME
+        floats this method's own residual/alpha accounting uses, so they
+        match the returned :class:`SimRun` bit-exactly) plus the
+        link-utilization balance statistics; with per-step series
+        capture on (trace mode) also the per-VC occupancy series and the
+        per-dest-column stability metric.  See docs/observability.md."""
+        with obs.span("sim.run", routing=self.config.routing,
+                      offered=float(offered), backend=self.backend):
+            return self._run(demand, offered, steps, window, events)
+
+    def _run(self, demand, offered, steps, window, events) -> SimRun:
         t = self.tables
         demand = np.asarray(demand, dtype=np.float64)
         if demand.shape != (t.n, t.n):
@@ -274,20 +294,33 @@ class Simulator:
         seg_total = np.empty(steps, dtype=np.float64)
         dropped_total = 0.0
         tb = t
+        # per-step series capture is opt-in (an active obs session with
+        # series on): `cap is None` is the only per-step cost otherwise
+        sess = obs.current()
+        cap = (_SimCapture(sess, self.config, steps, window)
+               if sess is not None and sess.enabled and sess.series
+               else None)
         for s0, s1, fs in segs:
             tb, step_fn = self._tables_for(fs)
             if fs is not None:
-                st, dropped = apply_fault_surgery(st, tb)
+                with obs.span("sim.fault_surgery", label=fs.label,
+                              step=s0):
+                    st, dropped = apply_fault_surgery(st, tb)
                 dropped_total += dropped
+                obs.counter("sim.fault_events").add(1.0)
             inj_seg = (inj * tb.routable).astype(self.dtype) \
                 if tb.faulted else inj
             inj_cap = (self.config.inj_factor
                        * inj_seg.sum(axis=1)).astype(self.dtype)
             seg_total[s0:s1] = float((inj_norm * tb.routable).sum()
                                      if tb.faulted else inj_norm.sum())
+            if cap is not None:
+                cap.set_segment(tb, inj_seg)
             for i in range(s0, s1):
                 st, stats = step_fn(st, inj_seg, inj_cap)
                 hist[i] = np.asarray(stats, dtype=np.float64)
+                if cap is not None:
+                    cap.on_step(i, st, hist[i])
             if fs is not None:
                 st = tuple(np.asarray(a) for a in st)
         # final fluid state, host-side (tests probe buffer occupancies)
@@ -312,9 +345,46 @@ class Simulator:
                        - src_backlog - dropped_total) \
             / max(injected_cum, 1e-30)
         acc_cum = float(hist[:, 1].sum())
-        alpha = 1.0 - float(hist[:, 5].sum()) / max(acc_cum, 1e-30)
+        div_cum = float(hist[:, 5].sum())
+        alpha = 1.0 - div_cum / max(acc_cum, 1e-30)
         latency = occupancy / max(delivered_rate, 1e-30)
         final_fs = segs[-1][2]
+        if sess is not None and sess.enabled:
+            # publish the run's own accounting: the SAME float values the
+            # residual/alpha identities above consumed, so the counters
+            # are bit-exact with the returned SimRun (pinned in
+            # tests/test_obs.py, mid-run fault surgery included)
+            m = sess.metrics
+            m.counter("sim.runs").add(1.0)
+            m.counter("sim.steps").add(float(steps))
+            m.counter("sim.injected").add(injected_cum)
+            m.counter("sim.delivered").add(delivered_cum)
+            m.counter("sim.accepted").add(acc_cum)
+            m.counter("sim.diverted").add(div_cum)
+            m.counter("sim.dropped").add(dropped_total)
+            m.gauge("sim.final_occupancy").set(float(hist[-1, 3]))
+            m.gauge("sim.final_src_backlog").set(src_backlog)
+            m.gauge("sim.residual").set(residual)
+            m.gauge("sim.alpha").set(alpha)
+            m.gauge("sim.delivered_rate").set(delivered_rate)
+            m.gauge("sim.theta").set(delivered_rate / total)
+            if cap is not None:
+                cap.finalize()
+            else:
+                # cheap one-shot balance proxy: the FINAL state's per-arc
+                # occupancy clipped at capacity (below saturation every
+                # queue drains each step, so this IS the per-link flit
+                # rate); the window-averaged sim.link_util histogram
+                # needs per-step series capture
+                ls = self.last_state
+                o_tot = (np.asarray(ls.q0, np.float64).sum(-1)
+                         + np.asarray(ls.q1, np.float64).sum(-1)
+                         + np.asarray(ls.q2, np.float64).sum(-1))
+                capacity = float(self.config.capacity)
+                util = (np.minimum(o_tot[np.asarray(tb.slot_ok, bool)],
+                                   capacity) / capacity)
+                m.histogram("sim.link_util_final").observe_many(util)
+                _publish_balance(m, util)
         return SimRun(
             routing=self.config.routing, offered=float(offered),
             theta=delivered_rate / total, delivered_rate=delivered_rate,
@@ -331,6 +401,115 @@ class Simulator:
                      "diverted": hist[:, 5],
                      "fault_events": np.array([e.step for e in evs],
                                               dtype=np.int64)})
+
+
+def _publish_balance(m, util) -> None:
+    """Gauge the balance statistics of a per-link utilization vector —
+    the paper's balanced-utilization thesis as a measured number."""
+    bs = balance_stats(util)
+    m.gauge("sim.balance.gini").set(bs["gini"])
+    m.gauge("sim.balance.p99_over_mean").set(bs["p99_over_mean"])
+    m.gauge("sim.balance.max_over_mean").set(bs["max_over_mean"])
+
+
+class _SimCapture:
+    """Per-step series capture for one :meth:`Simulator.run` under an
+    active obs session with series on (trace mode by default).
+
+    Publishes per-VC occupancy / injection-stall / diverted-fraction
+    series, accumulates the trailing window's per-arc forwarded mass
+    into the measured ``sim.link_util`` histogram + balance gauges, and
+    takes per-dest mass snapshots at the window edges for the
+    per-dest-column stability metric ``sim.dest_stability`` — the sharp
+    per-dest knee criterion that supersedes the aggregate
+    delivered/offered ("mushy knee") diagnosis for asymmetric sparse
+    demand.  All sums run host-side on the post-step state (one extra
+    pass over the queue tensors per step — the documented cost of series
+    capture; a jax-backend state is synced to host each captured step).
+    """
+
+    def __init__(self, sess, cfg: SimConfig, steps: int, window: int):
+        m = sess.metrics
+        self.m = m
+        self.cap = float(cfg.capacity)
+        self.win_start = steps - window
+        self.s_vc0 = m.series("sim.occ_vc0")
+        self.s_vc1 = m.series("sim.occ_vc1")
+        self.s_vc2 = m.series("sim.occ_vc2")
+        self.s_src = m.series("sim.src_backlog")
+        self.s_div = m.series("sim.diverted_frac")
+        self.s_stall = m.series("sim.inj_stalled")
+        self.tb = None
+        self.off_dest = None    # (M,) per-step offered mass per dest
+        self.util_sum = None    # (N, K) window forwarded-mass accumulator
+        self.n_win = 0
+        self.mass0 = None       # per-dest mass at the first window step
+        self.off_acc = None     # offered mass between the mass snapshots
+        self.mass_last = None
+
+    def set_segment(self, tb, inj_seg) -> None:
+        self.tb = tb
+        self.off_dest = np.asarray(inj_seg, np.float64).sum(axis=0)
+
+    def on_step(self, i: int, st, row) -> None:
+        q0, q1, q2, src, pend, stage2 = \
+            (np.asarray(a, np.float64) for a in st)
+        self.s_vc0.append(float(q0.sum()))
+        # stage2 fluid is converted-but-unlaunched phase-1 mass: it sits
+        # between vc1 and vc2, counted with vc1 (where its credit lives)
+        self.s_vc1.append(float(q1.sum() + stage2.sum()))
+        self.s_vc2.append(float(q2.sum()))
+        self.s_src.append(float(row[4]))
+        self.s_div.append(float(row[5] / max(row[1], 1e-30)))
+        self.s_stall.append(float(max(row[2] - row[1], 0.0)))
+        if i < self.win_start:
+            return
+        # forwarded mass next step = min(occupancy, capacity) per arc
+        # (processor sharing); sampled post-step — over a steady-state
+        # window the one-step offset is immaterial
+        o_tot = q0.sum(-1) + q1.sum(-1) + q2.sum(-1)
+        if self.util_sum is None:
+            self.util_sum = np.zeros_like(o_tot)
+            self.mass0 = self._dest_mass(q0, q2, src, pend)
+            self.off_acc = np.zeros_like(self.mass0)
+        else:
+            self.off_acc = self.off_acc + self.off_dest
+        self.util_sum += np.minimum(o_tot, self.cap)
+        self.n_win += 1
+        self.mass_last = self._dest_mass(q0, q2, src, pend)
+
+    @staticmethod
+    def _dest_mass(q0, q2, src, pend):
+        # per-FINAL-dest fluid mass: vc0 + vc2 queues + source backlog +
+        # the (mid, dest) pool column sums.  vc1/stage2 fluid is
+        # addressed to intermediates and its final-dest split IS the
+        # pend pool (the invariant repro.sim.faults documents), so
+        # adding q1 or stage2 would double count.
+        return (q0.sum(axis=(0, 1)) + q2.sum(axis=(0, 1))
+                + src.sum(axis=0) + pend.sum(axis=0))
+
+    def finalize(self) -> None:
+        if self.util_sum is None or self.tb is None or self.n_win == 0:
+            return
+        ok = np.asarray(self.tb.slot_ok, bool)
+        util = self.util_sum[ok] / (self.n_win * self.cap)
+        self.m.histogram("sim.link_util").observe_many(util)
+        _publish_balance(self.m, util)
+        if self.n_win >= 2:
+            # per-dest conservation over the window: delivered mass =
+            # mass drop + offered inflow between the snapshots; a column
+            # whose ratio stays ~1 is individually stable — the per-dest
+            # knee criterion (fault-surgery drops inside the window
+            # lower it, correctly reading as instability)
+            delivered = self.mass0 - self.mass_last + self.off_acc
+            sel = self.off_acc > 0
+            if sel.any():
+                stab = np.clip(delivered[sel] / self.off_acc[sel],
+                               0.0, None)
+                self.m.histogram("sim.dest_stability").observe_many(stab)
+                self.m.gauge("sim.dest_stability.min").set(float(stab.min()))
+                self.m.gauge("sim.dest_stability.mean").set(
+                    float(stab.mean()))
 
 
 def _demand_for(g: Graph, pattern, targets_mask, normalize: bool):
@@ -395,43 +574,55 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
     grid scaled to the expected degraded theta so the bracket lands."""
     cfg = _config_with(config, routing)
     pat, demand, targets_mask = _demand_for(g, pattern, targets_mask, True)
-    ref = (theta_analytic if theta_analytic is not None else
-           saturation_report(g, pat, routing=fluid_routing_spec(routing),
-                             targets_mask=targets_mask).theta)
-    if loads is None:
-        loads = np.asarray(DEFAULT_LOAD_GRID) * ref
-    loads = np.sort(np.asarray(loads, dtype=np.float64))
-    simr = Simulator(g, cfg, targets_mask, demand=demand)
-    grid = [simr.run(demand, lam, steps, events=events) for lam in loads]
-    runs = list(grid)
+    sweep_span = obs.span("sim.sweep", pattern=pat.name,
+                          routing=cfg.routing)
+    with sweep_span:
+        ref = (theta_analytic if theta_analytic is not None else
+               saturation_report(g, pat, routing=fluid_routing_spec(routing),
+                                 targets_mask=targets_mask).theta)
+        if loads is None:
+            loads = np.asarray(DEFAULT_LOAD_GRID) * ref
+        loads = np.sort(np.asarray(loads, dtype=np.float64))
+        simr = Simulator(g, cfg, targets_mask, demand=demand)
 
-    def stable(r):
-        return r.theta >= stable_ratio * r.offered
+        def probe(lam, phase):
+            # each probe is one spanned run, tagged with the sweep phase
+            # (grid / bracket extension / bisection refinement) and
+            # counted per phase — the probe-budget telemetry
+            obs.counter(f"sim.probes[{phase}]").add(1.0)
+            with obs.span("sim.probe", phase=phase, offered=float(lam)):
+                return simr.run(demand, lam, steps, events=events)
 
-    # extend the bracket when the grid missed the knee entirely
-    for _ in range(2):
-        if any(stable(r) for r in runs):
-            break
-        runs.append(simr.run(demand, 0.5 * min(r.offered for r in runs),
-                             steps, events=events))
-    for _ in range(2):
-        if any(not stable(r) for r in runs):
-            break
-        runs.append(simr.run(demand, 1.4 * max(r.offered for r in runs),
-                             steps, events=events))
+        runs = [probe(lam, "grid") for lam in loads]
 
-    lo = max((r.offered for r in runs if stable(r)), default=0.0)
-    unstable = [r.offered for r in runs if not stable(r) and r.offered > lo]
-    hi = min(unstable) if unstable else float("inf")
-    if lo > 0.0 and np.isfinite(hi):
-        for _ in range(refine):
-            mid = 0.5 * (lo + hi)
-            r = simr.run(demand, mid, steps, events=events)
-            runs.append(r)
-            if stable(r):
-                lo = mid
-            else:
-                hi = mid
+        def stable(r):
+            return r.theta >= stable_ratio * r.offered
+
+        # extend the bracket when the grid missed the knee entirely
+        for _ in range(2):
+            if any(stable(r) for r in runs):
+                break
+            runs.append(probe(0.5 * min(r.offered for r in runs),
+                              "bracket"))
+        for _ in range(2):
+            if any(not stable(r) for r in runs):
+                break
+            runs.append(probe(1.4 * max(r.offered for r in runs),
+                              "bracket"))
+
+        lo = max((r.offered for r in runs if stable(r)), default=0.0)
+        unstable = [r.offered for r in runs
+                    if not stable(r) and r.offered > lo]
+        hi = min(unstable) if unstable else float("inf")
+        if lo > 0.0 and np.isfinite(hi):
+            for _ in range(refine):
+                r = probe(0.5 * (lo + hi), "bisect")
+                runs.append(r)
+                if stable(r):
+                    lo = r.offered
+                else:
+                    hi = r.offered
+        sweep_span.set(theta=lo, probes=len(runs))
     # the curve includes EVERY probe — grid, bracket extensions, and
     # bisection refinements — sorted by offered load, so a sweep whose
     # initial grid missed the knee still returns points near saturation

@@ -179,6 +179,8 @@ def make_step(t: RouteTables, cfg: SimConfig, backend: str, dtype):
     backend.  ``inj`` is the (N, M) per-step offered quantum, ``inj_cap``
     the (N,) per-source drain limit; both are traced arguments so one
     compiled step serves a whole load sweep."""
+    from .. import obs
+    obs.counter(f"sim.step_build[{backend}]").add(1.0)
     if backend == "jax":
         import jax.numpy as jnp
         xp = jnp

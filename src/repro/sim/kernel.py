@@ -163,16 +163,22 @@ def make_step_sparse(t: RouteTables, cfg: SimConfig, backend: str, dtype):
     ``backend`` in :data:`SPARSE_BACKENDS`.  Same contract as
     :func:`repro.sim.engine.make_step`; ``dtype`` is the state dtype
     (float32 default — the dense float64 engine is the parity oracle)."""
+    from .. import obs
     if backend == "pallas":
         try:
             import jax
             on_tpu = jax.default_backend() == "tpu"
         except ImportError:
             on_tpu = False
+        # the pallas-vs-numpy dispatch, made observable: which fused
+        # implementation actually ran is otherwise invisible to callers
         if on_tpu:
+            obs.counter("sim.step_build[pallas_tpu]").add(1.0)
             return _make_step_kernel(t, cfg, dtype, interpret=False)
+        obs.counter("sim.step_build[fused_numpy]").add(1.0)
         return _make_step_fused_numpy(t, cfg, dtype)
     if backend == "pallas_interpret":
+        obs.counter("sim.step_build[pallas_interpret]").add(1.0)
         return _make_step_kernel(t, cfg, dtype, interpret=True)
     raise ValueError(f"unknown sparse sim backend {backend!r}; "
                      f"options: {SPARSE_BACKENDS}")

@@ -13,7 +13,6 @@
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -21,6 +20,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from .. import obs
 from ..configs.base import ArchConfig
 from ..data import DataConfig, synthetic_batch
 from .checkpoint import CheckpointManager, latest_step, restore_checkpoint
@@ -86,24 +86,31 @@ class Trainer:
         while step < self.tcfg.total_steps:
             # straggler watchdog times the WHOLE iteration (input pipeline +
             # step + any stall), not just the jitted step — that is what a
-            # deadline-based hot-spare policy sees on a real cluster
-            t0 = time.perf_counter()
-            if self.fault_hook is not None:
-                fault = self.fault_hook(step)
-                if fault == "crash":
-                    # simulate process death: drop in-memory state; a real
-                    # restart re-enters run() and resumes from checkpoint,
-                    # REPLAYING from the checkpointed step (the data pipeline
-                    # is a pure function of step, so the replay is exact)
-                    self.ckpt.join()
-                    self.restarts += 1
-                    state = self.resume_or_init(seed)
-                    step = int(np.asarray(state["step"]))
-                    continue
-            batch = self._device_batch(step)
-            state, metrics = self.step_fn(state, batch)
-            loss = float(np.asarray(metrics["loss"]))  # blocks
-            dt = time.perf_counter() - t0
+            # deadline-based hot-spare policy sees on a real cluster.
+            # obs.timed closes AFTER block_until_ready on the new state:
+            # jax dispatches the step asynchronously, so a bare
+            # perf_counter bracket that only syncs the scalar loss
+            # under-measures the step (param updates still in flight)
+            sp = obs.timed("train.step", step=step)
+            with sp:
+                if self.fault_hook is not None:
+                    fault = self.fault_hook(step)
+                    if fault == "crash":
+                        # simulate process death: drop in-memory state; a
+                        # real restart re-enters run() and resumes from
+                        # checkpoint, REPLAYING from the checkpointed step
+                        # (the data pipeline is a pure function of step,
+                        # so the replay is exact)
+                        self.ckpt.join()
+                        self.restarts += 1
+                        state = self.resume_or_init(seed)
+                        step = int(np.asarray(state["step"]))
+                        continue
+                batch = self._device_batch(step)
+                state, metrics = self.step_fn(state, batch)
+                sp.sync(state, metrics)
+            loss = float(np.asarray(metrics["loss"]))  # already on host
+            dt = sp.seconds
             straggler = False
             if len(durations) >= 5:
                 med = float(np.median(durations[-20:]))

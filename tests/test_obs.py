@@ -1,0 +1,318 @@
+"""§Observability (repro.obs): span tracing, the metrics registry, the
+simulator's bit-exact conservation counters, the obs=none no-op fast
+path, and benchmarks/compare.py's regression gate.
+
+The counter tests are the load-bearing ones: the simulator publishes
+its conservation totals from the SAME floats its own residual/alpha
+identities consume, so recomputing those identities from the counters
+must equal the returned SimRun fields EXACTLY (==, not approx) — on
+pn16, on the 8x16 torus, and through a mid-run fault event.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import pn_graph, random_faults
+from repro.fabric.model import torus3d_graph
+from repro.obs import MetricsRegistry, balance_stats
+from repro.sim import SimConfig, Simulator
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_PATH = os.path.join(REPO_ROOT, "src")
+
+
+def _uniform(g):
+    d = np.ones((g.n, g.n)) - np.eye(g.n)
+    return d / d.sum(axis=1, keepdims=True)
+
+
+# -- tracing ---------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_trace(tmp_path):
+    with obs.session(mode="trace") as sess:
+        with obs.span("outer.work", n=3):
+            with obs.span("inner.work"):
+                pass
+            with obs.span("inner.work"):
+                pass
+    assert [e[0] for e in sess.events] == ["inner.work", "inner.work",
+                                           "outer.work"]  # close order
+    depths = {e[0]: e[4] for e in sess.events}
+    assert depths["outer.work"] == 0 and depths["inner.work"] == 1
+    summ = sess.span_summary()
+    assert summ["inner.work"]["count"] == 2
+    assert summ["outer.work"]["total_s"] >= summ["inner.work"]["total_s"]
+
+    path = tmp_path / "trace.json"
+    sess.write_chrome(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert evs[0]["ph"] == "M"                       # process_name metadata
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == 3
+    outer = next(e for e in xs if e["name"] == "outer.work")
+    assert outer["args"] == {"n": 3}
+    for e in xs:                                     # Perfetto essentials
+        assert {"name", "cat", "ts", "dur", "pid", "tid"} <= set(e)
+
+    jl = tmp_path / "trace.jsonl"
+    sess.write_jsonl(str(jl))
+    lines = [json.loads(ln) for ln in jl.read_text().splitlines()]
+    assert lines[0]["schema"] == "repro.obs/1"
+    assert len(lines) == 4
+
+
+def test_timed_measures_with_obs_off():
+    assert obs.current() is None
+    with obs.timed("standalone.step") as sp:
+        sum(range(1000))
+    assert sp.seconds > 0
+
+
+def test_metrics_mode_records_no_spans():
+    with obs.session(mode="metrics") as sess:
+        with obs.span("should.be.noop"):
+            obs.counter("c").add(2.0)
+    assert sess.events == []
+    assert sess.metrics.counter("c").value == 2.0
+
+
+def test_session_modes_validate():
+    with pytest.raises(ValueError, match="unknown obs mode"):
+        with obs.session(mode="bogus"):
+            pass
+    with obs.session(mode="none") as sess:
+        assert not sess.enabled
+        assert sess.snapshot() is None
+
+
+# -- metrics registry ------------------------------------------------------
+
+
+def test_registry_kinds_and_mismatch():
+    reg = MetricsRegistry()
+    reg.counter("a").add(1.5)
+    reg.counter("a").add(1.5)                 # get-or-create, same object
+    reg.gauge("g").set(7.0)
+    reg.histogram("h").observe_many([1.0, 2.0, 3.0])
+    reg.series("s").append(1.0)
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("a")
+    snap = reg.snapshot()
+    assert snap["a"] == {"type": "counter", "value": 3.0}
+    assert snap["g"] == {"type": "gauge", "value": 7.0}
+    assert snap["h"]["count"] == 3 and snap["h"]["p50"] == 2.0
+    assert snap["s"] == {"type": "series", "count": 1, "mean": 1.0,
+                         "min": 1.0, "max": 1.0, "last": 1.0}
+
+
+def test_balance_stats_known_inputs():
+    flat = balance_stats(np.ones(100))
+    assert flat["gini"] == pytest.approx(0.0, abs=1e-12)
+    assert flat["max_over_mean"] == pytest.approx(1.0)
+    assert flat["p99_over_mean"] == pytest.approx(1.0)
+    # one link carries everything: gini -> (n-1)/n
+    onehot = balance_stats([0.0] * 99 + [1.0])
+    assert onehot["gini"] == pytest.approx(0.99)
+    assert onehot["max_over_mean"] == pytest.approx(100.0)
+    assert balance_stats([])["gini"] == 0.0
+    assert balance_stats([0.0, 0.0])["max_over_mean"] == 1.0
+
+
+# -- simulator counters: bit-exact with SimRun -----------------------------
+
+
+def _counters_match_run(sess, run):
+    """Recompute SimRun's residual/alpha identities from the published
+    counters; every comparison is EXACT (same floats, same ops)."""
+    m = sess.metrics
+    inj = m.counter("sim.injected").value
+    dlv = m.counter("sim.delivered").value
+    acc = m.counter("sim.accepted").value
+    div = m.counter("sim.diverted").value
+    drop = m.counter("sim.dropped").value
+    occ = m.get("sim.final_occupancy").value
+    src = m.get("sim.final_src_backlog").value
+    assert drop == run.dropped
+    assert m.get("sim.residual").value == run.residual
+    assert m.get("sim.alpha").value == run.alpha
+    assert abs(inj - dlv - occ - src - drop) / max(inj, 1e-30) \
+        == run.residual
+    assert 1.0 - div / max(acc, 1e-30) == run.alpha
+    assert m.get("sim.theta").value == run.theta
+    assert run.residual < 1e-9
+
+
+def test_sim_counters_bit_exact_pn16():
+    g = pn_graph(16)
+    sim = Simulator(g, SimConfig(routing="ugal_threshold(0)"))
+    with obs.session(mode="metrics") as sess:
+        run = sim.run(_uniform(g), offered=0.3, steps=120, window=30)
+    _counters_match_run(sess, run)
+    assert sess.metrics.counter("sim.steps").value == 120.0
+    assert sess.metrics.counter("sim.runs").value == 1.0
+    # final-state link utilization + balance publish even without series
+    snap = sess.snapshot()
+    assert snap["metrics"]["sim.link_util_final"]["count"] > 0
+    assert 0.0 <= snap["metrics"]["sim.balance.gini"]["value"] < 1.0
+
+
+def test_sim_counters_bit_exact_torus_with_fault_event():
+    g = torus3d_graph(8, 16, 1)
+    fs = random_faults(g, k_links=3, seed=1)
+    sim = Simulator(g, SimConfig(routing="minimal"))
+    with obs.session(mode="metrics") as sess:
+        run = sim.run(_uniform(g), offered=0.2, steps=160, window=40,
+                      events=[(60, fs)])
+    _counters_match_run(sess, run)
+    assert sess.metrics.counter("sim.fault_events").value == 1.0
+
+
+def test_sim_router_fault_drop_counter_exact():
+    from repro.core import FaultSet
+    g = pn_graph(16)
+    sim = Simulator(g, SimConfig(routing="ugal_threshold(0)"))
+    with obs.session(mode="metrics") as sess:
+        run = sim.run(_uniform(g), offered=0.3, steps=150, window=40,
+                      events=[(50, FaultSet(routers=[5]))])
+    assert run.dropped > 0
+    _counters_match_run(sess, run)
+
+
+def test_sim_series_capture_under_trace():
+    g = pn_graph(16)
+    with obs.session(mode="trace") as sess:
+        # built inside the session so the sim.build_tables span records
+        sim = Simulator(g, SimConfig(routing="ugal_threshold(0)"))
+        run = sim.run(_uniform(g), offered=0.3, steps=80, window=20)
+    m = sess.metrics
+    assert len(m.series("sim.occ_vc0")) == 80
+    assert len(m.series("sim.src_backlog")) == 80
+    # the per-step occupancy series sums to the history's occupancy
+    occ = (np.asarray(m.series("sim.occ_vc0"))
+           + np.asarray(m.series("sim.occ_vc1"))
+           + np.asarray(m.series("sim.occ_vc2")))
+    np.testing.assert_allclose(occ, run.history["occupancy"], rtol=1e-12)
+    snap = sess.snapshot()
+    assert snap["metrics"]["sim.link_util"]["count"] > 0
+    assert snap["metrics"]["sim.dest_stability"]["count"] == g.n
+    # uniform demand well below the knee: every dest column is stable
+    assert snap["metrics"]["sim.dest_stability.min"]["value"] > 0.9
+    names = [e[0] for e in sess.events]
+    assert "sim.run" in names and "sim.build_tables" in names
+
+
+# -- the obs=none fast path ------------------------------------------------
+
+
+def test_null_span_singleton_and_no_allocation():
+    assert obs.current() is None
+    assert obs.span("a") is obs.span("b") is obs.NULL_SPAN
+    assert obs.counter("x") is obs.gauge("y") is obs.NULL_METRIC
+
+    def seam():
+        # the exact shape of every instrumented hot-loop seam
+        with obs.span("hot.loop", k=1):
+            obs.counter("hot.count").add(1.0)
+
+    seam()  # warm up any lazy caches
+    tracemalloc.start()
+    before = tracemalloc.take_snapshot()
+    for _ in range(200):
+        seam()
+    after = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    growth = sum(s.size_diff for s in after.compare_to(before, "filename")
+                 if s.size_diff > 0)
+    # 200 no-op seams must not accumulate memory: a handful of KB covers
+    # tracemalloc's own bookkeeping noise, while a real per-call record
+    # (one dict + one tuple each) would exceed it several-fold
+    assert growth < 8192, f"obs=none seam leaked {growth} B over 200 calls"
+
+
+def test_perf_flag_obs_default_none():
+    from repro.perf import flags
+    assert flags().obs == "none"
+    with obs.session() as sess:  # mode=None resolves from the flag
+        assert not sess.enabled
+
+
+# -- benchmarks/compare.py regression gate ---------------------------------
+
+
+def _write_bench(path, seconds, err):
+    payload = {"schema_version": 2, "git_rev": "test0000",
+               "entries": [{"name": "sim[pn16:ugal]",
+                            "seconds": seconds, "max_rel_err": err},
+                           {"name": "tables[t2]", "seconds": 0.001}],
+               "errors": []}
+    path.write_text(json.dumps(payload))
+
+
+def _compare(argv):
+    env = dict(os.environ, PYTHONPATH=SRC_PATH)
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.compare", *argv],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+
+
+def test_compare_flags_synthetic_regression(tmp_path):
+    base, new = tmp_path / "BENCH_a.json", tmp_path / "BENCH_b.json"
+    _write_bench(base, seconds=10.0, err=0.01)
+    _write_bench(new, seconds=12.0, err=0.01)      # +20% wall
+    r = _compare([str(base), str(new), "--wall-pct", "15"])
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "sim[pn16:ugal]" in r.stdout and "wall" in r.stdout
+    # same regression under a generous budget: passes
+    r = _compare([str(base), str(new), "--wall-pct", "50"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_compare_parity_regression_and_floors(tmp_path):
+    base, new = tmp_path / "BENCH_a.json", tmp_path / "BENCH_b.json"
+    _write_bench(base, seconds=10.0, err=0.01)
+    _write_bench(new, seconds=10.0, err=0.05)      # 5x parity drift
+    r = _compare([str(base), str(new), "--wall-pct", "500"])
+    assert r.returncode == 1
+    assert "err" in r.stdout
+    # microsecond-entry noise stays under the absolute-seconds floor:
+    # tables[t2] doubling from 1 ms to 2 ms must NOT trip the gate
+    _write_bench(base, seconds=10.0, err=0.01)
+    payload = json.loads(new.read_text())
+    payload["entries"][0].update(seconds=10.0, max_rel_err=0.01)
+    payload["entries"][1]["seconds"] = 0.002
+    new.write_text(json.dumps(payload))
+    r = _compare([str(base), str(new), "--wall-pct", "15"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_compare_trajectory_mode(tmp_path):
+    _write_bench(tmp_path / "BENCH_1.json", seconds=10.0, err=0.01)
+    _write_bench(tmp_path / "BENCH_2.json", seconds=10.5, err=0.01)
+    _write_bench(tmp_path / "BENCH_3.json", seconds=30.0, err=0.01)
+    r = _compare(["--dir", str(tmp_path), "--wall-pct", "100"])
+    assert r.returncode == 1                       # the 10.5 -> 30 hop
+    r = _compare(["--dir", str(tmp_path), "--wall-pct", "400"])
+    assert r.returncode == 0
+    r = _compare(["--dir", str(tmp_path), "--glob", "NOPE_*.json"])
+    assert r.returncode == 0 and "nothing to compare" in r.stdout
+
+
+def test_compare_bad_file_fails_loud(tmp_path):
+    bad = tmp_path / "BENCH_x.json"
+    bad.write_text("{not json")
+    good = tmp_path / "BENCH_y.json"
+    _write_bench(good, seconds=1.0, err=0.01)
+    r = _compare([str(bad), str(good)])
+    assert r.returncode == 2
