@@ -209,6 +209,21 @@ def main(argv=None) -> None:
                               f" speedup={o[0]['speedup']:.1f}x"),
                    err_of=lambda o: o[1])
         records[-1]["row"] = out[0]
+        out = _run(records, "kernels[pn16:ugal_compacted]",
+                   kb.pn16_ugal_compacted,
+                   lambda o: (f"knee={o[0]['theta_sim']:.4f}"
+                              f" analytic={o[0]['theta_analytic']:.4f}"
+                              f" cols={o[0]['compacted_dests']}/{o[0]['dense_dests']}"
+                              f" speedup={o[0]['speedup']:.1f}x"),
+                   err_of=lambda o: o[1])
+        records[-1]["row"] = out[0]
+        out = _run(records, "kernels[pn27:ugal]", kb.pn27_ugal,
+                   lambda o: (f"theta={o[0]['theta_sim']:.4f}"
+                              f" analytic={o[0]['theta_analytic']:.4f}"
+                              f" cells={o[0]['dense_cells']}"
+                              f" dests={o[0]['compacted_dests']}"),
+                   err_of=lambda o: o[1])
+        records[-1]["row"] = out[0]
         out = _run(records, "kernels[pn27:sweep]", kb.pn27_sweep,
                    lambda o: (f"theta={o[0]['theta_sim']:.4f}"
                               f" analytic={o[0]['theta_analytic']:.4f}"

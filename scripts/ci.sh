@@ -110,9 +110,12 @@ compare_bench BENCH_6.json
 
 echo "== benchmarks: fused step kernel rows -> BENCH_7.json (budget ${KERNEL_BUDGET}s) =="
 # the fused sparse-dest sim backend: pn16 step timings + the 10x sweep
-# acceptance row + the PN(27) past-the-dense-cap sweep.  --err-budget
-# 0.025 is the ISSUE's 2.5% knee-parity bound — benchmarks.run exits
-# nonzero when any row's measured theta drifts further from analytic
+# acceptance row + the compacted-adaptive rows (pn16 neighbor-fed ugal
+# vs the all-columns path — err forced to 1.0 if the speedup drops
+# under 3x — and the PN(27) ugal sweep that only fits compacted) + the
+# PN(27) past-the-dense-cap minimal sweep.  --err-budget 0.025 is the
+# ISSUE's 2.5% knee-parity bound — benchmarks.run exits nonzero when
+# any row's measured theta drifts further from analytic
 snapshot_bench BENCH_7.json
 timeout "$KERNEL_BUDGET" python -m benchmarks.run --json BENCH_7.json \
     --only kernels --err-budget 0.025

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_step_update", "DEST_TILE"]
+__all__ = ["fused_step_update", "fused_decision", "DEST_TILE"]
 
 # dest-tile width: the TPU lane dimension; also the block the numpy
 # fused path (repro.sim.kernel) uses so both backends skip identical
@@ -124,3 +124,82 @@ def fused_step_update(q, split, deliver, fac, corr, inflow, tile_mask,
         **kwargs,
     )(jnp.asarray(tile_mask, jnp.int32), q, split, deliver, fac, corr,
       inflow)
+
+
+def _decision_kernel(mask_ref, b0_ref, split_ref, dist_ref, hval_ref,
+                     cand_ref, qval_ref, out_ref, *, thr):
+    j = pl.program_id(1)
+
+    @pl.when(mask_ref[j] != 0)
+    def _compute():
+        # ECMP-split-weighted vc0 backlog toward each dest in the tile —
+        # the q_min contraction of the per-hop UGAL rule, evaluated only
+        # where candidate fluid exists
+        q_min = (b0_ref[...][:, :, None] * split_ref[...]).sum(axis=1)
+        divert = dist_ref[...] * q_min > thr + hval_ref[...] * qval_ref[...]
+        out_ref[...] = jnp.where(divert, cand_ref[...], 0.0)
+
+    @pl.when(mask_ref[j] == 0)
+    def _skip():
+        # no candidate fluid in the tile: nothing can divert
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("thr", "block_n", "block_d",
+                                             "interpret"))
+def fused_decision(b0, split, dist, hval, cand, q_val, tile_mask,
+                   thr: float, block_n: int = 128,
+                   block_d: int = DEST_TILE, interpret: bool = False):
+    """The per-hop UGAL decision as one blocked pass: divert candidates.
+
+    Folds the ``q_min = einsum("nk,nkm->nm", b0, split)`` backlog gather
+    and the threshold comparison into per-(router-block, dest-tile)
+    blocks, skipping tiles with no candidate fluid (``tile_mask``) — the
+    decision-phase companion of :func:`fused_step_update`, sharing its
+    block structure so both kernels skip identical tiles.
+
+    Args:
+      b0:        (N, K)    vc0 backlog per out-slot.
+      split:     (N, K, M) equal-split minimal table (M may be the
+                 compacted dest axis).
+      dist:      (N, M)    remaining minimal hops.
+      hval:      (N, M)    mean two-leg detour estimate.
+      cand:      (N, M)    enqueueing vc0 candidate fluid.
+      q_val:     (N,)      weighted vc1 backlog.
+      tile_mask: (ceil(M / block_d),) int32, nonzero = candidates there.
+      thr:       the threshold T in flit units (static: one compile per
+                 SimConfig).
+
+    Returns the (N, M) diverting candidate fluid ``cand * [divert]``.
+    Rows with zero backlog never divert (``0 > thr + hval*q_val`` is
+    false for ``thr >= 0``), so a partial last tile's block padding is
+    discarded by the clipped write-back, exactly as in the step kernel.
+    """
+    n, k, m = split.shape
+    bn = min(block_n, n)
+    bd = min(block_d, m)
+    grid = (pl.cdiv(n, bn), pl.cdiv(m, bd))
+
+    qkd = pl.BlockSpec((bn, k, bd), lambda i, j, mask: (i, 0, j))
+    nk = pl.BlockSpec((bn, k), lambda i, j, mask: (i, 0))
+    nd = pl.BlockSpec((bn, bd), lambda i, j, mask: (i, j))
+    n1 = pl.BlockSpec((bn, 1), lambda i, j, mask: (i, 0))
+
+    kwargs = {}
+    if not interpret:
+        from ._compat import CompilerParams
+        kwargs["compiler_params"] = CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        functools.partial(_decision_kernel, thr=thr),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[nk, qkd, nd, nd, nd, n1],
+            out_specs=nd,
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, m), cand.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(jnp.asarray(tile_mask, jnp.int32), b0, split, dist, hval, cand,
+      q_val.reshape(n, 1))

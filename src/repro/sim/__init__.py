@@ -86,7 +86,12 @@ class SimRun:
     Little's-law mean steps in the network (>= mean hops; meaningful
     below saturation — past it, it grows with the run length);
     ``alpha`` the measured fraction of accepted fluid that was never
-    diverted; ``residual`` the relative flow-conservation defect."""
+    diverted; ``residual`` the relative flow-conservation defect.
+    ``dest_stability_min`` / ``dest_stability_mean`` are the per-dest-
+    column delivered/offered ratios over the trailing window (NaN unless
+    the run was asked for them with ``per_dest=True``) — the sharp knee
+    criterion for asymmetric sparse demand, where a handful of saturated
+    columns hide inside a healthy aggregate ratio."""
 
     routing: str
     offered: float
@@ -103,6 +108,8 @@ class SimRun:
     backend: str
     dropped: float = 0.0         # fluid lost to fault surgery (cumulative)
     faults: str | None = None    # final fault state's label, if any
+    dest_stability_min: float = float("nan")
+    dest_stability_mean: float = float("nan")
     history: dict = field(repr=False, default_factory=dict)
 
 
@@ -121,7 +128,11 @@ class SimSweep:
     not the plateau, is the analytic theta's counterpart.
     ``theta_unstable`` is the smallest offered load observed to collapse
     (the bracket's other side; inf if every probe was stable),
-    ``theta_analytic`` the fluid-model reference that scaled the grid."""
+    ``theta_analytic`` the fluid-model reference that scaled the grid.
+    ``knee`` records which stability criterion decided the bracket:
+    ``aggregate`` (delivered/offered over all columns) or ``per_dest``
+    (the MINIMUM per-dest-column ratio — sharper for sparse asymmetric
+    demand, see :meth:`Simulator.run`)."""
 
     pattern: str
     routing: str
@@ -133,6 +144,7 @@ class SimSweep:
     delivered: np.ndarray
     latency: np.ndarray
     alpha: np.ndarray
+    knee: str = "aggregate"
     runs: list = field(repr=False, default_factory=list)
 
 
@@ -147,31 +159,56 @@ class Simulator:
                  demand: np.ndarray | None = None):
         self.g = g
         self.config = config
+        if config.compact not in ("auto", "off"):
+            raise ValueError(f"unknown compact mode {config.compact!r}; "
+                             f"options: auto, off")
         if targets_mask is None:
             targets_mask = g.meta.get("leaf_mask")
         self.active = (np.arange(g.n) if targets_mask is None
                        else np.nonzero(np.asarray(targets_mask, bool))[0])
-        work = g.n * g.max_degree * len(self.active)
-        self.backend = pick_backend(config.backend, work)
-        if self.backend not in SPARSE_BACKENDS and work > SIM_MAX_CELLS:
+        m_dense = len(self.active)
+        used = None
+        if demand is not None and config.compact == "auto":
+            used = np.asarray(demand)[:, self.active].sum(axis=0) > 0
+        # Static dest compaction, phase 1 — the active set itself.  Under
+        # minimal routing every dest column evolves independently, so
+        # dropping the columns ``demand`` never addresses is exact on
+        # EVERY backend; shrinking BEFORE backend selection also sizes
+        # the auto choice and the dense-cell guard to the state that
+        # will actually be allocated (a sparse-demand pn27 fits the
+        # jit-compiled jax step without ever needing the fused path).
+        if used is not None and config.mode == "minimal" and not used.all():
+            self.active = self.active[used]
+            used = None
+        dense_cells = g.n * g.max_degree * len(self.active)
+        self.backend = pick_backend(config.backend, dense_cells)
+        if (self.backend not in SPARSE_BACKENDS
+                and dense_cells > SIM_MAX_CELLS):
             raise ValueError(
                 f"simulation state is dense (router, out-slot, dest) "
-                f"tensors: {work} cells > SIM_MAX_CELLS={SIM_MAX_CELLS} "
+                f"tensors: {dense_cells} cells > "
+                f"SIM_MAX_CELLS={SIM_MAX_CELLS} "
                 f"(~{8 * 3 * SIM_MAX_CELLS >> 30} GB of queue state).  "
                 f"Use backend='pallas' (the blocked sparse-dest step) or "
                 f"a smaller instance of the same family.")
-        # Static dest compaction: under minimal routing every dest column
-        # evolves independently, so dropping the columns ``demand`` never
-        # addresses is exact — and what lets > SIM_MAX_CELLS fabrics run.
-        # ugal/valiant spread diversions over the whole active set, so
-        # compaction would change the intermediate pool there; those
-        # modes keep all columns and rely on the fused backends' dynamic
-        # (router, dest-tile) block skipping instead.
-        if (demand is not None and config.mode == "minimal"
-                and self.backend in SPARSE_BACKENDS):
-            used = np.asarray(demand)[:, self.active].sum(axis=0) > 0
-            if not used.all():
-                self.active = self.active[used]
+        # phase 2 — the per-VC dest axis.  ugal/valiant spread diversions
+        # over the whole active set, so the active set must stay whole —
+        # but only the FINAL-destination axes need the demanded columns.
+        # The fused backends carry q0/q2/src and the PEND pool's dest
+        # axis on the compacted columns while q1/stage2 keep the full
+        # mid axis (repro.sim.kernel); the stage-2 closure is the
+        # demanded set itself (diverted fluid keeps its destination), so
+        # this is exact — and what lets a pn27-class fabric sweep
+        # adaptively.
+        self.dest_cols = None
+        if (used is not None and config.mode in ("ugal", "valiant")
+                and self.backend in SPARSE_BACKENDS and not used.all()):
+            self.dest_cols = np.nonzero(used)[0]
+        m_comp = (len(self.active) if self.dest_cols is None
+                  else len(self.dest_cols))
+        obs.gauge("sim.dest_cols.dense").set(float(m_dense))
+        obs.gauge("sim.dest_cols.compacted").set(float(m_comp))
+        obs.gauge("sim.compact_ratio").set(m_comp / max(m_dense, 1))
         # dense backends default to float64 (the jax step runs under a
         # scoped enable_x64 — float32 rounding bias visibly shifts the
         # threshold rule's diversion duty cycle); the fused sparse-dest
@@ -190,7 +227,7 @@ class Simulator:
     def _make_step(self, tb):
         if self.backend in SPARSE_BACKENDS:
             return make_step_sparse(tb, self.config, self.backend,
-                                    self.dtype)
+                                    self.dtype, dest_cols=self.dest_cols)
         return make_step(tb, self.config, self.backend, self.dtype)
 
     def _tables_for(self, fs):
@@ -221,7 +258,7 @@ class Simulator:
 
     def run(self, demand: np.ndarray, offered: float,
             steps: int | None = None, window: int | None = None,
-            events=None) -> SimRun:
+            events=None, per_dest: bool = False) -> SimRun:
         """Open-loop run: every source offers ``offered * demand[s, :]``
         per step; measurements average the trailing ``window`` steps.
         ``demand`` is a dense (N, N) matrix in the caller's normalization
@@ -247,12 +284,22 @@ class Simulator:
         match the returned :class:`SimRun` bit-exactly) plus the
         link-utilization balance statistics; with per-step series
         capture on (trace mode) also the per-VC occupancy series and the
-        per-dest-column stability metric.  See docs/observability.md."""
+        per-dest-column stability metric.  See docs/observability.md.
+
+        ``per_dest=True`` additionally tracks per-dest-column mass
+        conservation over the trailing window and fills the run's
+        ``dest_stability_min`` / ``dest_stability_mean`` fields: the
+        per-column delivered/offered ratio that
+        ``saturation_sweep(knee="per_dest")`` uses as its (sharper)
+        stability criterion for asymmetric sparse demand.  Costs one
+        host-side pass over the final-dest tensors per window step."""
         with obs.span("sim.run", routing=self.config.routing,
                       offered=float(offered), backend=self.backend):
-            return self._run(demand, offered, steps, window, events)
+            return self._run(demand, offered, steps, window, events,
+                             per_dest)
 
-    def _run(self, demand, offered, steps, window, events) -> SimRun:
+    def _run(self, demand, offered, steps, window, events,
+             per_dest=False) -> SimRun:
         t = self.tables
         demand = np.asarray(demand, dtype=np.float64)
         if demand.shape != (t.n, t.n):
@@ -268,6 +315,19 @@ class Simulator:
                              "placement_demand already do)")
         if inj_norm.sum() <= 0:
             raise ValueError("demand matrix is all zero")
+        cols = self.dest_cols
+        if cols is not None:
+            off_cols = inj_norm.sum(axis=0)
+            outside = float(off_cols.sum() - off_cols[cols].sum())
+            if outside > 1e-9 * max(float(off_cols.sum()), 1.0):
+                raise ValueError(
+                    "demand addresses destination columns outside the "
+                    "compacted dest axis this Simulator was built for; "
+                    "rebuild with Simulator(demand=...) covering them, "
+                    "or SimConfig(compact='off')")
+            inj_norm_run = inj_norm[:, cols]
+        else:
+            inj_norm_run = inj_norm
         evs = normalize_events(events)
         steps = (self.default_steps(events=evs) if steps is None
                  else int(steps))
@@ -283,10 +343,10 @@ class Simulator:
         segs = [(s0, (marks[i + 1][0] if i + 1 < len(marks) else steps), fs)
                 for i, (s0, fs) in enumerate(marks)]
 
-        inj = (offered * inj_norm).astype(self.dtype)
+        inj = (offered * inj_norm_run).astype(self.dtype)
         # host numpy in, host numpy out: the jax step converts on entry
         # (under its enable_x64 scope, so float64 survives the round trip)
-        st = init_state(t, self.dtype).as_tuple()
+        st = init_state(t, self.dtype, dest_cols=cols).as_tuple()
         hist = np.empty((steps, 6), dtype=np.float64)
         # per-step surviving-demand total: each fault segment's history
         # is normalized by ITS OWN fault state's surviving demand, not
@@ -300,27 +360,44 @@ class Simulator:
         cap = (_SimCapture(sess, self.config, steps, window)
                if sess is not None and sess.enabled and sess.series
                else None)
+        # per-dest-column conservation over the trailing window (the
+        # per-dest knee criterion): mass snapshots at the window edges
+        # plus the offered inflow between them, exactly the accounting
+        # _SimCapture.finalize publishes as sim.dest_stability
+        win_start = steps - window
+        pd_mass0 = pd_off = pd_last = None
         for s0, s1, fs in segs:
             tb, step_fn = self._tables_for(fs)
             if fs is not None:
                 with obs.span("sim.fault_surgery", label=fs.label,
                               step=s0):
-                    st, dropped = apply_fault_surgery(st, tb)
+                    st, dropped = apply_fault_surgery(st, tb,
+                                                      dest_cols=cols)
                 dropped_total += dropped
                 obs.counter("sim.fault_events").add(1.0)
-            inj_seg = (inj * tb.routable).astype(self.dtype) \
-                if tb.faulted else inj
+            rt = tb.routable if cols is None else tb.routable[:, cols]
+            inj_seg = (inj * rt).astype(self.dtype) if tb.faulted else inj
             inj_cap = (self.config.inj_factor
                        * inj_seg.sum(axis=1)).astype(self.dtype)
             seg_total[s0:s1] = float((inj_norm * tb.routable).sum()
                                      if tb.faulted else inj_norm.sum())
             if cap is not None:
                 cap.set_segment(tb, inj_seg)
+            off_dest = (np.asarray(inj_seg, np.float64).sum(axis=0)
+                        if per_dest else None)
             for i in range(s0, s1):
                 st, stats = step_fn(st, inj_seg, inj_cap)
                 hist[i] = np.asarray(stats, dtype=np.float64)
                 if cap is not None:
                     cap.on_step(i, st, hist[i])
+                if per_dest and i >= win_start:
+                    dm = _dest_mass_host(st)
+                    if pd_mass0 is None:
+                        pd_mass0 = dm
+                        pd_off = np.zeros_like(dm)
+                    else:
+                        pd_off = pd_off + off_dest
+                    pd_last = dm
             if fs is not None:
                 st = tuple(np.asarray(a) for a in st)
         # final fluid state, host-side (tests probe buffer occupancies)
@@ -348,6 +425,14 @@ class Simulator:
         div_cum = float(hist[:, 5].sum())
         alpha = 1.0 - div_cum / max(acc_cum, 1e-30)
         latency = occupancy / max(delivered_rate, 1e-30)
+        dest_stab_min = dest_stab_mean = float("nan")
+        if per_dest and pd_last is not None and pd_off is not None:
+            sel = pd_off > 0
+            if sel.any():
+                delivered_d = pd_mass0 - pd_last + pd_off
+                stab = np.clip(delivered_d[sel] / pd_off[sel], 0.0, None)
+                dest_stab_min = float(stab.min())
+                dest_stab_mean = float(stab.mean())
         final_fs = segs[-1][2]
         if sess is not None and sess.enabled:
             # publish the run's own accounting: the SAME float values the
@@ -394,6 +479,8 @@ class Simulator:
             dropped=dropped_total,
             faults=(None if final_fs is None or final_fs.empty
                     else final_fs.label),
+            dest_stability_min=dest_stab_min,
+            dest_stability_mean=dest_stab_mean,
             history={"delivered": hist[:, 0] / norm,
                      "accepted": hist[:, 1] / norm,
                      "offered": hist[:, 2] / norm,
@@ -401,6 +488,18 @@ class Simulator:
                      "diverted": hist[:, 5],
                      "fault_events": np.array([e.step for e in evs],
                                               dtype=np.int64)})
+
+
+def _dest_mass_host(st):
+    """Per-FINAL-dest fluid mass of a step state, host-side: vc0 + vc2
+    queues + source backlog + the (mid, dest) pool column sums.  vc1 and
+    stage2 fluid is addressed to intermediates and its final-dest split
+    IS the pend pool (the invariant repro.sim.faults documents), so
+    adding it would double count.  Width follows the state's dest axis
+    (compacted or dense)."""
+    q0, q1, q2, src, pend, stage2 = (np.asarray(a, np.float64) for a in st)
+    return (q0.sum(axis=(0, 1)) + q2.sum(axis=(0, 1))
+            + src.sum(axis=0) + pend.sum(axis=0))
 
 
 def _publish_balance(m, util) -> None:
@@ -546,7 +645,8 @@ def _config_with(config: SimConfig | None, routing: str) -> SimConfig:
     parse_sim_routing(routing)  # validate before building tables
     return SimConfig(routing=routing, buffer=base.buffer,
                      capacity=base.capacity, inj_factor=base.inj_factor,
-                     backend=base.backend, dtype=base.dtype)
+                     backend=base.backend, dtype=base.dtype,
+                     compact=base.compact)
 
 
 def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
@@ -555,7 +655,7 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
                      targets_mask: np.ndarray | None = None,
                      refine: int = 3, stable_ratio: float = 0.98,
                      theta_analytic: float | None = None,
-                     events=None) -> SimSweep:
+                     events=None, knee: str = "aggregate") -> SimSweep:
     """Latency-vs-offered-load curve and measured saturation throughput
     for one (topology, pattern, routing).
 
@@ -571,7 +671,20 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
     :meth:`Simulator.run`) — the measured knee is then the degraded
     saturation throughput, comparable to the analytic
     ``degraded_report`` theta of the final fault state; pass a ``loads``
-    grid scaled to the expected degraded theta so the bracket lands."""
+    grid scaled to the expected degraded theta so the bracket lands.
+
+    ``knee`` picks the stability criterion: ``aggregate`` (default — the
+    total delivered/offered ratio) or ``per_dest`` (stable only while
+    the MINIMUM per-dest-column delivered/offered ratio stays >=
+    ``stable_ratio``).  Aggregate knees go mushy on sparse asymmetric
+    demand — a few saturated columns drown in the healthy majority and
+    the measured theta overshoots; the per-dest criterion reads each
+    column's own conservation over the window (``per_dest=True`` runs)
+    and snaps the knee to the first column that collapses."""
+    if knee not in ("aggregate", "per_dest"):
+        raise ValueError(f"unknown knee criterion {knee!r}; options: "
+                         f"aggregate, per_dest")
+    per_dest = knee == "per_dest"
     cfg = _config_with(config, routing)
     pat, demand, targets_mask = _demand_for(g, pattern, targets_mask, True)
     sweep_span = obs.span("sim.sweep", pattern=pat.name,
@@ -591,11 +704,14 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
             # counted per phase — the probe-budget telemetry
             obs.counter(f"sim.probes[{phase}]").add(1.0)
             with obs.span("sim.probe", phase=phase, offered=float(lam)):
-                return simr.run(demand, lam, steps, events=events)
+                return simr.run(demand, lam, steps, events=events,
+                                per_dest=per_dest)
 
         runs = [probe(lam, "grid") for lam in loads]
 
         def stable(r):
+            if per_dest and np.isfinite(r.dest_stability_min):
+                return r.dest_stability_min >= stable_ratio
             return r.theta >= stable_ratio * r.offered
 
         # extend the bracket when the grid missed the knee entirely
@@ -633,7 +749,7 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
         loads=np.array([r.offered for r in curve]),
         delivered=np.array([r.theta for r in curve]),
         latency=np.array([r.latency for r in curve]),
-        alpha=np.array([r.alpha for r in curve]), runs=runs)
+        alpha=np.array([r.alpha for r in curve]), knee=knee, runs=runs)
 
 
 def simulate_placement(placement, profile, routing: str = "ugal_threshold(0)",

@@ -99,7 +99,11 @@ class SimConfig:
     blocked structure in numpy on CPU, or the kernel under the pallas
     interpreter); ``dtype`` is the state dtype — ``auto`` (float64 for
     the dense backends, float32 for the fused ones), ``float32``, or
-    ``float64``."""
+    ``float64``; ``compact`` gates static dest compaction against the
+    run's demand matrix — ``auto`` (default: shrink the active set under
+    minimal routing, carry the per-VC compacted dest axis on the fused
+    backends under ugal/valiant) or ``off`` (keep every column; the
+    all-columns baseline the compaction benchmarks time against)."""
 
     routing: str = "minimal"
     buffer: float = float("inf")
@@ -107,6 +111,7 @@ class SimConfig:
     inj_factor: float = 1.0
     backend: str = "auto"
     dtype: str = "auto"
+    compact: str = "auto"
 
     @property
     def mode(self) -> str:
@@ -162,11 +167,17 @@ def pick_backend(backend: str, work: int) -> str:
     return "jax" if work >= SIM_JAX_MIN_WORK else "numpy"
 
 
-def init_state(t: RouteTables, dtype) -> SimState:
+def init_state(t: RouteTables, dtype, dest_cols=None) -> SimState:
+    """Zero fluid state for ``t``.  With ``dest_cols`` (the fused
+    backends' per-VC compacted dest axis) the final-dest tensors — q0,
+    q2, src, and the pend pool's dest axis — carry only the ``C``
+    demanded columns; q1 and stage2 keep the full ``M`` mid axis, since
+    Valiant leg-1 fluid is addressed to intermediates."""
     n, k, m = t.n, t.k, t.m
+    c = m if dest_cols is None else len(dest_cols)
     z = lambda *s: np.zeros(s, dtype=dtype)
-    return SimState(q0=z(n, k, m), q1=z(n, k, m), q2=z(n, k, m),
-                    src=z(n, m), pend=z(m, m), stage2=z(m))
+    return SimState(q0=z(n, k, c), q1=z(n, k, m), q2=z(n, k, c),
+                    src=z(n, c), pend=z(m, c), stage2=z(m))
 
 
 # stats vector layout emitted by one step

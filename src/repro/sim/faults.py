@@ -77,7 +77,8 @@ def normalize_events(events) -> tuple:
     return tuple(evs)
 
 
-def apply_fault_surgery(state: tuple, t: RouteTables) -> tuple[tuple, float]:
+def apply_fault_surgery(state: tuple, t: RouteTables,
+                        dest_cols=None) -> tuple[tuple, float]:
     """Reconcile live fluid state with new route tables ``t``.
 
     ``state`` is the step tuple ``(q0, q1, q2, src, pend, stage2)`` (any
@@ -87,18 +88,31 @@ def apply_fault_surgery(state: tuple, t: RouteTables) -> tuple[tuple, float]:
     matched to dead pending columns.  Requeue of fluid from dead
     out-slots conserves mass exactly (the new split rows sum to 1 on
     every surviving routable pair).  Idempotent: a second pass against
-    the same tables drops nothing."""
+    the same tables drops nothing.
+
+    With ``dest_cols`` (the fused backends' per-VC compacted dest axis,
+    see repro.sim.kernel) the final-dest tensors q0/q2/src and the pend
+    pool's dest axis carry only those active columns; the routable and
+    split views are column-selected to match, while q1/stage2 keep the
+    full mid axis exactly as in the dense layout."""
     q0, q1, q2, src, pend, stage2 = \
         [np.asarray(a, dtype=np.float64).copy() for a in state]
     routable = np.asarray(t.routable, dtype=bool)
     slot_ok = np.asarray(t.slot_ok, dtype=bool)
     split = np.asarray(t.split, dtype=np.float64)
+    if dest_cols is None:
+        routable_c, split_c = routable, split
+        keep_pend = routable[t.active, :]             # (M, M)
+    else:
+        cols = np.asarray(dest_cols, dtype=np.int64)
+        routable_c = routable[:, cols]                # (N, C)
+        split_c = split[:, :, cols]                   # (N, K, C)
+        keep_pend = routable[t.active][:, cols]       # (M, C)
     dropped = 0.0
 
     # 1. pending-pool columns: pend[mid, dest] survives iff dest is still
     # routable FROM the mid; vc1 fluid and stage2 credit shrink by the
     # same per-mid fraction, keeping conversion mixing consistent
-    keep_pend = routable[t.active, :]                 # (M, M)
     row_tot = pend.sum(axis=1)
     pend *= keep_pend
     frac = np.where(row_tot > 0,
@@ -109,21 +123,21 @@ def apply_fault_surgery(state: tuple, t: RouteTables) -> tuple[tuple, float]:
     dropped += before - (q1.sum() + stage2.sum())
 
     # 2. unroutable (router, dest) fluid is lost with the fault
-    for q in (q0, q1, q2):
+    for q, rt in ((q0, routable_c), (q1, routable), (q2, routable_c)):
         before = q.sum()
-        q *= routable[:, None, :]
+        q *= rt[:, None, :]
         dropped += before - q.sum()
 
     # 3. fluid in dead out-slots requeues through the new minimal split
     dead = ~slot_ok
-    for q in (q0, q1, q2):
-        moved = (q * dead[:, :, None]).sum(axis=1)    # (N, M)
+    for q, sp in ((q0, split_c), (q1, split), (q2, split_c)):
+        moved = (q * dead[:, :, None]).sum(axis=1)    # (N, W)
         q *= slot_ok[:, :, None]
-        q += moved[:, None, :] * split
+        q += moved[:, None, :] * sp
 
     # 4. backlog toward unroutable dests goes home (is dropped)
     before = src.sum()
-    src *= routable
+    src *= routable_c
     dropped += before - src.sum()
 
     return (q0, q1, q2, src, pend, stage2), float(dropped)

@@ -25,6 +25,12 @@ only populated (router, dest-tile) blocks computed:
     3. the fused update ``q·fac - q·corr·deliver + inflow·split`` tile
        by tile, which is exactly the pallas kernel's contraction.
 
+  The contiguous live slabs of step 3 are independent work units
+  (disjoint output column ranges), run in waves of ``sim_workers``
+  threads past a live-cell threshold — the ``util_workers`` idiom of
+  repro.core.utilization one layer down, bitwise deterministic at any
+  worker count.
+
 * ``backend="pallas_interpret"`` — the pallas kernel itself through the
   pallas interpreter on CPU: slow, but bit-for-bit the TPU program;
   this is the backend the parity tests drive against the numpy float64
@@ -35,15 +41,26 @@ state via ``SimConfig(dtype=...)``; the dense numpy float64 engine stays
 the parity oracle, with knee-level agreement at tolerance rather than
 bitwise (rounding shifts individual threshold decisions, not the knee).
 
-Destination sparsity has a static half too: for ``minimal`` routing the
-Simulator compacts the dest axis to the demanded columns (see
-``Simulator(demand=...)``), which is what lifts the SIM_MAX_CELLS dense
-cap — a pn27-class fabric (64M dense cells) sweeps in a few-M-cell
-compacted state.
+Destination sparsity has a static half too, and it is per VC.  Under
+``minimal`` routing the Simulator shrinks the active set itself (see
+``Simulator(demand=...)``).  Under ``ugal``/``valiant`` the active set
+must stay whole — diversions spread over every active intermediate —
+but only the *final-destination* axes need the demanded columns: with
+``dest_cols`` the fused backends carry q0/q2/src and the PEND pool's
+dest axis on the compacted ``C`` demanded columns while q1/stage2 keep
+the full ``M`` mid axis (:class:`_DestAxis` holds the index-remapped
+views).  The stage-2 column closure is the demanded set itself —
+diverted fluid keeps its final destination — so the compaction is exact,
+and a pn27-class fabric (64M dense cells) sweeps adaptively in a
+few-M-cell compacted state.  The per-hop UGAL decision (q_min gather +
+threshold + candidate mask) is fused into the same blocked pass /
+its own pallas kernel (:func:`repro.kernels.sim_step.fused_decision`)
+instead of running as unfused dense ops.
 """
 
 from __future__ import annotations
 
+import time
 from collections import defaultdict
 
 import numpy as np
@@ -59,6 +76,11 @@ SPARSE_BACKENDS = ("pallas", "pallas_interpret")
 # dest-tile width shared with the pallas kernel (import kept lazy so the
 # numpy path works without jax installed)
 DEST_TILE = 128
+
+# live queue cells per step below which the slab loop stays serial:
+# thread spawn/join per wave costs ~0.1 ms, which only pays for itself
+# once the numpy work per step clears ~1M cells
+SIM_THREAD_MIN_CELLS = 1_000_000
 
 
 class _StepAux:
@@ -135,6 +157,57 @@ class _StepAux:
         self.fix_tile = self.fix_dst // tile              # (F,)
 
 
+class _DestAxis:
+    """One destination-axis view of the blocked state: the full ``M``
+    active columns, or compacted to the ``C`` demanded columns.
+
+    ``cols`` (sorted active-set indices) remaps the deliver-fixup and
+    delivered-extraction index arrays onto the compacted axis; entries
+    whose dest column is outside the view are dropped — exact, because
+    a compacted VC never carries fluid addressed there (injection and
+    conversion only feed demanded columns, transit preserves the dest).
+    """
+
+    def __init__(self, aux: _StepAux, cols=None):
+        tile = aux.tile
+        if cols is None:
+            self.w = aux.m
+            self.fix_arc, self.fix_dst = aux.fix_arc, aux.fix_dst
+            self.fix_router = aux.fix_router
+            self.dst_router, self.dst_col = aux.dst_router, aux.dst_col
+        else:
+            cols = np.asarray(cols, dtype=np.int64)
+            pos = np.full(aux.m, -1, dtype=np.int64)
+            pos[cols] = np.arange(len(cols))
+            self.w = len(cols)
+            keep = pos[aux.fix_dst] >= 0
+            self.fix_arc = aux.fix_arc[keep]
+            self.fix_dst = pos[aux.fix_dst[keep]]
+            self.fix_router = aux.fix_router[keep]
+            keep = pos[aux.dst_col] >= 0
+            self.dst_router = aux.dst_router[keep]
+            self.dst_col = pos[aux.dst_col[keep]]
+        self.starts = np.arange(0, self.w, tile)
+        self.tiles = [(int(lo), int(min(lo + tile, self.w)))
+                      for lo in self.starts]
+        self.n_tiles = len(self.tiles)
+        self.fix_tile = self.fix_dst // tile
+
+
+def _pool_diag(t: RouteTables, cols):
+    """(mid, dest-col) pairs of the compacted PEND pool's self-delivery
+    diagonal: pool row ``mid`` meets column ``pos[mid]`` where the mid is
+    itself a demanded dest.  ``cols=None`` is the full diagonal."""
+    m = t.m
+    if cols is None:
+        idx = np.arange(m)
+        return idx, idx
+    pos = np.full(m, -1, dtype=np.int64)
+    pos[np.asarray(cols, dtype=np.int64)] = np.arange(len(cols))
+    diag_mid = np.nonzero(pos >= 0)[0]
+    return diag_mid, pos[diag_mid]
+
+
 def step_aux(t: RouteTables, tile: int = DEST_TILE) -> _StepAux:
     """The (cached) arc-index structure of one RouteTables instance."""
     aux = getattr(t, "_step_aux", None)
@@ -158,12 +231,21 @@ def resolve_dtype(name: str, backend: str):
                      "float32, float64")
 
 
-def make_step_sparse(t: RouteTables, cfg: SimConfig, backend: str, dtype):
+def make_step_sparse(t: RouteTables, cfg: SimConfig, backend: str, dtype,
+                     dest_cols=None):
     """Build the blocked sparse-dest ``step(state, inj, inj_cap)`` for
     ``backend`` in :data:`SPARSE_BACKENDS`.  Same contract as
     :func:`repro.sim.engine.make_step`; ``dtype`` is the state dtype
-    (float32 default — the dense float64 engine is the parity oracle)."""
+    (float32 default — the dense float64 engine is the parity oracle).
+    ``dest_cols`` carries the per-VC compacted dest axis (ugal/valiant
+    static compaction): state tensors q0/q2/src/pend-dest hold only
+    those columns, q1/stage2 the full mid axis."""
     from .. import obs
+    if cfg.mode == "ugal":
+        # the decision phase runs fused (blocked q_min + threshold +
+        # candidate mask) on every sparse backend — dispatch-counted
+        # like the step implementations themselves
+        obs.counter("sim.step_build[fused_decision]").add(1.0)
     if backend == "pallas":
         try:
             import jax
@@ -174,12 +256,14 @@ def make_step_sparse(t: RouteTables, cfg: SimConfig, backend: str, dtype):
         # implementation actually ran is otherwise invisible to callers
         if on_tpu:
             obs.counter("sim.step_build[pallas_tpu]").add(1.0)
-            return _make_step_kernel(t, cfg, dtype, interpret=False)
+            return _make_step_kernel(t, cfg, dtype, interpret=False,
+                                     dest_cols=dest_cols)
         obs.counter("sim.step_build[fused_numpy]").add(1.0)
-        return _make_step_fused_numpy(t, cfg, dtype)
+        return _make_step_fused_numpy(t, cfg, dtype, dest_cols=dest_cols)
     if backend == "pallas_interpret":
         obs.counter("sim.step_build[pallas_interpret]").add(1.0)
-        return _make_step_kernel(t, cfg, dtype, interpret=True)
+        return _make_step_kernel(t, cfg, dtype, interpret=True,
+                                 dest_cols=dest_cols)
     raise ValueError(f"unknown sparse sim backend {backend!r}; "
                      f"options: {SPARSE_BACKENDS}")
 
@@ -189,20 +273,54 @@ def make_step_sparse(t: RouteTables, cfg: SimConfig, backend: str, dtype):
 # ---------------------------------------------------------------------------
 
 
-def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
+def _run_slab_waves(units, run_one, workers):
+    """Run independent slab units in waves of ``workers`` threads — the
+    ``util_workers`` wave idiom of repro.core.utilization, under its
+    OpenBLAS-pinning guard.  Units write disjoint output column ranges,
+    so the result is bitwise identical at any worker count.  Per-wave
+    wall times go to obs when a session is active."""
+    from .. import obs
+    from ..core.utilization import _blas_limit, _run_units
+    sess = obs.current()
+    with _blas_limit():
+        for lo in range(0, len(units), workers):
+            wave = units[lo:lo + workers]
+            t0 = time.perf_counter() if sess is not None else 0.0
+            _run_units([(lambda u=u: run_one(*u)) for u in wave],
+                       workers=workers)
+            if sess is not None:
+                obs.counter("sim.slab_waves").add(1.0)
+                obs.histogram("sim.slab_wave_seconds").observe(
+                    time.perf_counter() - t0)
+
+
+def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype,
+                           dest_cols=None):
+    from ..perf import flags
     aux = step_aux(t)
     n, k, m = t.n, t.k, t.m
     nk = n * k
     asd = lambda a: np.ascontiguousarray(np.asarray(a, dtype=dtype))
-    split3 = asd(t.split)                     # (N, K, M)
-    split_flat = split3.reshape(nk, m)
-    # column sums of split: 1 where the dest is reachable, 0 where not —
-    # the enqueue's exact mass multiplier for the occupancy accounting
-    reach = asd(t.split.sum(axis=1))          # (N, M)
+    axF = _DestAxis(aux)
+    axC = _DestAxis(aux, dest_cols) if dest_cols is not None else axF
+    ax = (axC, axF, axC)                      # per-VC dest-axis views
+    split3F = asd(t.split)                    # (N, K, M)
+    reachF = asd(t.split.sum(axis=1))         # (N, M)
+    if dest_cols is not None:
+        csel = np.asarray(dest_cols, dtype=np.int64)
+        split3C = asd(t.split[:, :, csel])    # (N, K, C)
+        reachC = asd(reachF[:, csel])
+        dist_c = asd(t.dist_act[:, csel])
+        hval_c = asd(t.hval_rem[:, csel])
+    else:
+        split3C, reachC = split3F, reachF
+        dist_c = asd(t.dist_act)
+        hval_c = asd(t.hval_rem)
+    split3_v = (split3C, split3F, split3C)
+    reach_v = (reachC, reachF, reachC)
+    diag_mid, diag_col = _pool_diag(t, dest_cols)
     spread = asd(t.spread)
     w_val = asd(np.einsum("nm,nkm->nk", t.spread, t.split))
-    dist_act = asd(t.dist_act)
-    hval_rem = asd(t.hval_rem)
     spread_T = asd(t.spread.T)
     in_active = np.zeros(n, dtype=bool)
     in_active[t.active] = True
@@ -218,17 +336,15 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
     # private dtype-matched copy: scipy upcasts mixed-dtype products, so
     # an f64 R would silently run the whole arrival gather in f64
     R = aux.R.astype(dtype)
-    fr, fd, fro, ftl = aux.fix_arc, aux.fix_dst, aux.fix_router, aux.fix_tile
-    hs, sd = aux.dst_router, aux.dst_col
-    tiles, n_tiles, starts = aux.tiles, aux.n_tiles, aux.starts
-    midx = np.arange(m)
 
     # double-buffered outputs: the step is functional (inputs untouched),
     # but reuses its own previous output buffers when the caller feeds
     # the returned state back in (the run loop), avoiding allocations
-    bufs = [[np.zeros((n, k, m), dtype=dtype) for _ in range(3)]
+    bufs = [[np.zeros((n, k, ax[v].w), dtype=dtype) for v in range(3)]
             for _ in range(2)]
-    scratch = np.empty((nk, m), dtype=dtype)
+    # one retention-scratch plane per VC: slab units of different VCs
+    # run concurrently under sim_workers and must not share scratch
+    scratch = [np.empty((nk, ax[v].w), dtype=dtype) for v in range(3)]
     # carried per-(arc, tile) occupancies, keyed by the identity of the
     # state arrays we returned; any foreign state (step 0, post-surgery)
     # triggers a fresh reduction pass
@@ -238,12 +354,9 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
         key = tuple(id(q) for q in qs)
         if cache["key"] == key:
             return cache["ot"]
-        ot = []
-        for q in qs:
-            qf = q.reshape(nk, m)
-            ot.append(np.add.reduceat(qf, starts, axis=1)
-                      if m else np.zeros((nk, 0), dtype=dtype))
-        return ot
+        return [np.add.reduceat(q.reshape(nk, ax[v].w), ax[v].starts,
+                                axis=1)
+                for v, q in enumerate(qs)]
 
     def step(state, inj, inj_cap):
         # f32 note: space/tiny overflows to inf and is clipped by the
@@ -255,9 +368,9 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
         q0, q1, q2, src, pend, stage2 = [np.asarray(a, dtype=dtype)
                                          for a in state]
         qs = (q0, q1, q2)
-        ot = occupancies(qs)                      # 3 x (NK, T)
+        ot = occupancies(qs)                      # 3 x (NK, T_v)
         o = [x.sum(axis=1) for x in ot]           # 3 x (NK,)
-        tmass = [x.sum(axis=0) for x in ot]       # 3 x (T,)
+        tmass = [x.sum(axis=0) for x in ot]       # 3 x (T_v,)
         vc_live = [bool(tm.any()) for tm in tmass]
 
         share = cap / np.maximum(o[0] + o[1] + o[2], cap)      # (NK,)
@@ -269,21 +382,23 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
         dl_sum = [dtype(0.0)] * 3
         stage2_add = None
         for v, q in enumerate(qs):
+            axis = ax[v]
             if not vc_live[v]:
-                arr.append(np.zeros((n, m), dtype=dtype))
+                arr.append(np.zeros((n, axis.w), dtype=dtype))
                 continue
-            a = np.asarray(R @ q.reshape(nk, m))
-            dl = a[hs, sd]
+            a = np.asarray(R @ q.reshape(nk, axis.w))
+            dl = a[axis.dst_router, axis.dst_col]
             if v == 1:
-                stage2_add = (hs, dl.copy())
+                stage2_add = dl.copy()
             else:
                 dl_sum[v] = dl.sum()
-            a[hs, sd] = 0.0                        # transit arrivals only
+            a[axis.dst_router, axis.dst_col] = 0.0  # transit arrivals only
             arr.append(a)
 
         # -- credit throttle ------------------------------------------
         s_v, damp, fac, fixdelta, rowfwd = [], [], [], [], []
         for v in range(3):
+            axis = ax[v]
             own = (o[v] * (1.0 - share)).reshape(n, k).sum(axis=1)
             space = np.maximum(buf - own, 0.0)
             desire = arr[v].sum(axis=1)
@@ -291,10 +406,11 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
             sp = np.concatenate([s, np.ones(1, dtype=dtype)])
             d = sp[head_flat]                      # (NK,)
             f = 1.0 - share * d
-            vals = qs[v].reshape(nk, m)[fr, fd]
-            fx = vals * share[fr] * (1.0 - d[fr])
+            vals = qs[v].reshape(nk, axis.w)[axis.fix_arc, axis.fix_dst]
+            fx = vals * share[axis.fix_arc] * (1.0 - d[axis.fix_arc])
             rf = (o[v] * f).reshape(n, k).sum(axis=1) \
-                - np.bincount(fro, weights=fx, minlength=n).astype(dtype)
+                - np.bincount(axis.fix_router, weights=fx,
+                              minlength=n).astype(dtype)
             arr[v] *= s[:, None]
             s_v.append(s)
             damp.append(d)
@@ -307,7 +423,7 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
         # -- phase-1 conversions --------------------------------------
         if stage2_add is not None:
             stage2 = stage2.copy()
-            stage2[sd] += stage2_add[1]
+            stage2[axF.dst_col] += stage2_add
         conv2 = None
         if stage2.any() and pend.any():
             occ2_now = rowfwd[2] + arr[2].sum(axis=1)
@@ -315,13 +431,13 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
             pend_sum = pend.sum(axis=1)
             drain = np.minimum(np.minimum(stage2, avail2), pend_sum)
             mix = pend / np.maximum(pend_sum, tiny)[:, None]
-            take = drain[:, None] * mix
+            take = drain[:, None] * mix            # (M, C)
             pend = pend - take
             stage2 = stage2 - drain
-            delivered = delivered + take[midx, midx].sum()
+            delivered = delivered + take[diag_mid, diag_col].sum()
             take = take.copy()
-            np.fill_diagonal(take, 0.0)
-            conv2 = np.zeros((n, m), dtype=dtype)
+            take[diag_mid, diag_col] = 0.0
+            conv2 = np.zeros((n, axC.w), dtype=dtype)
             conv2[active] = take
 
         # -- injection -------------------------------------------------
@@ -331,8 +447,8 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
         q_inj = src * frac[:, None]
         src = src - q_inj
 
-        # -- routing decision -----------------------------------------
-        cand = arr[0] + q_inj
+        # -- routing decision (fused: q_min + threshold + mask) --------
+        cand = arr[0] + q_inj                      # (N, C)
         div_tot = dtype(0.0)
         if mode == "minimal":
             div_eff = None
@@ -342,19 +458,45 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
             if mode == "valiant":
                 div_cand = cand
             else:
+                # the per-hop UGAL decision folded into the blocked
+                # pass: decisions only matter where candidate fluid
+                # exists, and a zero-backlog row never diverts (the
+                # inequality's LHS is 0 and thr >= 0), so the q_min
+                # contraction runs over live candidate tiles x
+                # backlogged rows only — reusing the occupancy carry
                 b0 = np.maximum(o[0] - cap, 0.0).reshape(n, k)
-                b1 = np.maximum(o[1] - cap, 0.0).reshape(n, k)
                 rows = np.nonzero(b0.any(axis=1))[0]
-                q_min = np.zeros((n, m), dtype=dtype)
-                if rows.size > n // 4:
-                    q_min = np.matmul(b0[:, None, :], split3)[:, 0, :]
-                elif rows.size:
-                    for r in rows:
-                        q_min[r] = b0[r] @ split3[r]
-                q_val = (b1 * w_val).sum(axis=1)
-                div_ind = (dist_act * q_min
-                           > thr + hval_rem * q_val[:, None]).astype(dtype)
-                div_cand = cand * div_ind
+                div_cand = np.zeros_like(cand)
+                if rows.size:
+                    b1 = np.maximum(o[1] - cap, 0.0).reshape(n, k)
+                    q_val = (b1 * w_val).sum(axis=1)
+                    if rows.size > n // 4:
+                        ctm = np.add.reduceat(cand.sum(axis=0), axC.starts)
+                        ti = 0
+                        while ti < axC.n_tiles:
+                            if not ctm[ti] > 0:
+                                ti += 1
+                                continue
+                            tj = ti
+                            while (tj + 1 < axC.n_tiles
+                                   and ctm[tj + 1] > 0):
+                                tj += 1
+                            lo, hi = axC.tiles[ti][0], axC.tiles[tj][1]
+                            q_min = np.matmul(
+                                b0[:, None, :],
+                                split3C[:, :, lo:hi])[:, 0, :]
+                            ind = (dist_c[:, lo:hi] * q_min
+                                   > thr + hval_c[:, lo:hi]
+                                   * q_val[:, None])
+                            np.multiply(cand[:, lo:hi], ind,
+                                        out=div_cand[:, lo:hi])
+                            ti = tj + 1
+                    else:
+                        for r in rows:
+                            q_min = b0[r] @ split3C[r]
+                            ind = (dist_c[r] * q_min
+                                   > thr + hval_c[r] * q_val[r])
+                            div_cand[r] = cand[r] * ind
             occ1_now = rowfwd[1] + arr[1].sum(axis=1)
             space1 = np.maximum(buf - occ1_now, 0.0)
             desire1 = div_cand.sum(axis=1)
@@ -391,62 +533,90 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
 
         # -- fused update + enqueue over live (dest-tile) slabs --------
         # contiguous runs of live tiles process as one slab: fewer numpy
-        # dispatches and contiguous column ranges, same blocks skipped
+        # dispatches and contiguous column ranges, same blocks skipped.
+        # Slabs are independent (disjoint output columns), so they are
+        # collected as work units and run in sim_workers waves when the
+        # live cell count clears the threading threshold.
         out_set = 1 if any(q is bufs[0][v] for v, q in enumerate(qs)) else 0
-        new_qs, occ_total = [], stage2.sum()
-        new_ot = []
+        new_qs = [None] * 3
+        new_ot = [None] * 3
+        plane = [None] * 3
+        occ_total = stage2.sum()
+        units = []                  # (v, tile-run ti..tj, cols lo..hi)
         for v in range(3):
             q = qs[v]
+            axis = ax[v]
             live = vc_live[v] or (inflow[v] is not None
                                   and bool(inflow[v].any()))
             if not live:
-                new_qs.append(q)                   # all-zero: pass through
-                new_ot.append(ot[v])
+                new_qs[v] = q                      # all-zero: pass through
+                new_ot[v] = ot[v]
                 continue
             infl = inflow[v]
             if infl is None:
-                infl = np.zeros((n, m), dtype=dtype)
-            itm = np.add.reduceat(infl.sum(axis=0), starts) \
-                if m else np.zeros(0, dtype=dtype)
+                infl = np.zeros((n, axis.w), dtype=dtype)
+            itm = np.add.reduceat(infl.sum(axis=0), axis.starts)
             out = bufs[out_set][v]
             if out is q:                           # never alias the input
                 out = bufs[1 - out_set][v]
-            outf = out.reshape(nk, m)
-            qf = q.reshape(nk, m)
+            outf = out.reshape(nk, axis.w)
+            qf = q.reshape(nk, axis.w)
             otn = np.empty_like(ot[v])
             live_t = (tmass[v] > 0) | (itm > 0)
             ti = 0
-            while ti < n_tiles:
+            while ti < axis.n_tiles:
                 if not live_t[ti]:
-                    outf[:, tiles[ti][0]:tiles[ti][1]] = 0.0
+                    outf[:, axis.tiles[ti][0]:axis.tiles[ti][1]] = 0.0
                     otn[:, ti] = 0.0
                     ti += 1
                     continue
                 tj = ti
-                while tj + 1 < n_tiles and live_t[tj + 1]:
+                while tj + 1 < axis.n_tiles and live_t[tj + 1]:
                     tj += 1
-                lo, hi = tiles[ti][0], tiles[tj][1]
-                # out = inflow*split + q*fac over the slab; the retention
-                # product goes through a preallocated scratch plane (a
-                # fresh 20 MB temporary per vc per step would be mmap'd
-                # and page-faulted every time)
-                np.multiply(infl[:, None, lo:hi], split3[:, :, lo:hi],
-                            out=out[:, :, lo:hi])
-                np.multiply(qf[:, lo:hi], fac[v][:, None],
-                            out=scratch[:, lo:hi])
-                outf[:, lo:hi] += scratch[:, lo:hi]
-                # per-(arc, tile) occupancies fall out of one reduction
-                # over the finished slab (retention + enqueue together)
-                otn[:, ti:tj + 1] = np.add.reduceat(
-                    outf[:, lo:hi], starts[ti:tj + 1] - lo, axis=1)
+                units.append((v, ti, tj, axis.tiles[ti][0],
+                              axis.tiles[tj][1]))
                 ti = tj + 1
-            if len(fr):
-                outf[fr, fd] -= fixdelta[v]
-                otn[fr, ftl] -= fixdelta[v]
             occ_total = occ_total + rowfwd[v].sum() \
-                + (infl * reach).sum()
-            new_qs.append(out)
-            new_ot.append(otn)
+                + (infl * reach_v[v]).sum()
+            new_qs[v] = out
+            new_ot[v] = otn
+            plane[v] = (qf, outf, otn, infl)
+
+        def run_slab(v, ti, tj, lo, hi):
+            qf, outf, otn, infl = plane[v]
+            out3 = new_qs[v]
+            # out = inflow*split + q*fac over the slab; the retention
+            # product goes through a preallocated scratch plane (a
+            # fresh 20 MB temporary per vc per step would be mmap'd
+            # and page-faulted every time)
+            np.multiply(infl[:, None, lo:hi], split3_v[v][:, :, lo:hi],
+                        out=out3[:, :, lo:hi])
+            np.multiply(qf[:, lo:hi], fac[v][:, None],
+                        out=scratch[v][:, lo:hi])
+            outf[:, lo:hi] += scratch[v][:, lo:hi]
+            # per-(arc, tile) occupancies fall out of one reduction
+            # over the finished slab (retention + enqueue together)
+            otn[:, ti:tj + 1] = np.add.reduceat(
+                outf[:, lo:hi], ax[v].starts[ti:tj + 1] - lo, axis=1)
+
+        workers = flags().sim_workers
+        if (workers > 1 and len(units) > 1
+                and sum(nk * (hi - lo)
+                        for _, _, _, lo, hi in units)
+                >= SIM_THREAD_MIN_CELLS):
+            _run_slab_waves(units, run_slab, workers)
+        else:
+            for u in units:
+                run_slab(*u)
+
+        for v in range(3):
+            if plane[v] is None:
+                continue
+            axis = ax[v]
+            if len(axis.fix_arc):
+                _, outf, otn, _ = plane[v]
+                outf[axis.fix_arc, axis.fix_dst] -= fixdelta[v]
+                otn[axis.fix_arc, axis.fix_tile] -= fixdelta[v]
 
         cache["key"] = tuple(id(q) for q in new_qs)
         cache["ot"] = new_ot
@@ -464,25 +634,39 @@ def _make_step_fused_numpy(t: RouteTables, cfg: SimConfig, dtype):
 # ---------------------------------------------------------------------------
 
 
-def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
+def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret,
+                      dest_cols=None):
     import jax
     import jax.numpy as jnp
 
-    from ..kernels.sim_step import fused_step_update
+    from ..kernels.sim_step import fused_decision, fused_step_update
 
     aux = step_aux(t)
     n, k, m = t.n, t.k, t.m
     nk = n * k
-    tile, n_tiles = aux.tile, aux.n_tiles
-    pad = n_tiles * tile - m
+    tile = aux.tile
+    axF = _DestAxis(aux)
+    axC = _DestAxis(aux, dest_cols) if dest_cols is not None else axF
+    ax = (axC, axF, axC)
+    widths = tuple(a.w for a in ax)
     asd = lambda a: jnp.asarray(np.asarray(a, dtype=dtype))
-    split3 = asd(t.split)
-    deliver = asd(t.deliver)
-    reach = asd(t.split.sum(axis=1))
+    split3F = asd(t.split)
+    deliverF = asd(t.deliver)
+    if dest_cols is not None:
+        csel = np.asarray(dest_cols, dtype=np.int64)
+        split3C = asd(t.split[:, :, csel])
+        deliverC = asd(t.deliver[:, :, csel])
+        dist_c = asd(t.dist_act[:, csel])
+        hval_c = asd(t.hval_rem[:, csel])
+    else:
+        split3C, deliverC = split3F, deliverF
+        dist_c = asd(t.dist_act)
+        hval_c = asd(t.hval_rem)
+    split3_v = (split3C, split3F, split3C)
+    deliver_v = (deliverC, deliverF, deliverC)
+    diag_mid, diag_col = _pool_diag(t, dest_cols)
     spread = asd(t.spread)
     w_val = asd(np.einsum("nm,nkm->nk", t.spread, t.split))
-    dist_act = asd(t.dist_act)
-    hval_rem = asd(t.hval_rem)
     spread_T = asd(t.spread.T)
     in_active = np.zeros(n, dtype=bool)
     in_active[t.active] = True
@@ -492,36 +676,38 @@ def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
     head_flat = jnp.asarray(t.head.reshape(-1))
     # reverse-arc gather: sentinel -> the appended zero row
     rev = jnp.asarray(np.where(aux.rev >= 0, aux.rev, nk).reshape(n, k))
-    hs, sd = jnp.asarray(aux.dst_router), jnp.asarray(aux.dst_col)
     mode, thr = cfg.mode, cfg.threshold
     npdt = dtype
     cap = npdt(cfg.capacity)
     buf = npdt(min(cfg.buffer, _BIG))
     thr = npdt(thr)
     tiny = npdt(_TINY) if npdt == np.float64 else np.float32(1e-30)
-    midx = jnp.arange(m)
 
-    def tile_sums(x):                        # (..., M) -> (..., T)
+    def tile_sums(x, v):                     # (..., W_v) -> (..., T_v)
+        pad = ax[v].n_tiles * tile - widths[v]
         xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
-        return xp.reshape(x.shape[:-1] + (n_tiles, tile)).sum(-1)
+        return xp.reshape(x.shape[:-1] + (ax[v].n_tiles, tile)).sum(-1)
 
     def step_impl(state, inj, inj_cap):
         q0, q1, q2, src, pend, stage2 = state
         qs = (q0, q1, q2)
-        o = [q.reshape(nk, m).sum(axis=1) for q in qs]
+        o = [q.reshape(nk, widths[v]).sum(axis=1)
+             for v, q in enumerate(qs)]
         share = cap / jnp.maximum(o[0] + o[1] + o[2], cap)    # (NK,)
 
         arr, dl_sum, s_v, damp = [], [], [], []
-        zrow = jnp.zeros((1, m), dtype=q0.dtype)
         stage2_new = stage2
         for v, q in enumerate(qs):
-            mv = jnp.concatenate([q.reshape(nk, m) * share[:, None], zrow])
-            a = mv[rev.reshape(-1)].reshape(n, k, m).sum(axis=1)
-            dl = a[hs, sd]
+            axis = ax[v]
+            zrow = jnp.zeros((1, axis.w), dtype=q0.dtype)
+            mv = jnp.concatenate([q.reshape(nk, axis.w) * share[:, None],
+                                  zrow])
+            a = mv[rev.reshape(-1)].reshape(n, k, axis.w).sum(axis=1)
+            dl = a[axis.dst_router, axis.dst_col]
             if v == 1:
-                stage2_new = stage2_new.at[sd].add(dl)
+                stage2_new = stage2_new.at[axis.dst_col].add(dl)
             dl_sum.append(dl.sum())
-            a = a.at[hs, sd].set(0.0)
+            a = a.at[axis.dst_router, axis.dst_col].set(0.0)
             own = (o[v] * (1.0 - share)).reshape(n, k).sum(axis=1)
             space = jnp.maximum(buf - own, 0.0)
             desire = a.sum(axis=1)
@@ -537,10 +723,12 @@ def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
         def rowfwd(v):
             # post-forward per-router occupancy, without touching q:
             # retention of o minus the delivered fluid's extra share
+            axis = ax[v]
             f = (o[v] * (1.0 - share * damp[v])).reshape(n, k).sum(axis=1)
-            vals = qs[v].reshape(nk, m)[aux.fix_arc, aux.fix_dst]
-            fx = vals * share[aux.fix_arc] * (1.0 - damp[v][aux.fix_arc])
-            return f - jnp.zeros(n, q0.dtype).at[aux.fix_router].add(fx)
+            vals = qs[v].reshape(nk, axis.w)[axis.fix_arc, axis.fix_dst]
+            fx = vals * share[axis.fix_arc] \
+                * (1.0 - damp[v][axis.fix_arc])
+            return f - jnp.zeros(n, q0.dtype).at[axis.fix_router].add(fx)
 
         # -- conversions ----------------------------------------------
         occ2_now = rowfwd(2) + arr[2].sum(axis=1)
@@ -548,12 +736,12 @@ def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
         pend_sum = pend.sum(axis=1)
         drain = jnp.minimum(jnp.minimum(stage2, avail2), pend_sum)
         mix = pend / jnp.maximum(pend_sum, tiny)[:, None]
-        take = drain[:, None] * mix
+        take = drain[:, None] * mix                # (M, C)
         pend = pend - take
         stage2 = stage2 - drain
-        delivered = delivered + take[midx, midx].sum()
-        take = take.at[midx, midx].set(0.0)
-        conv2 = jnp.zeros((n, m), q0.dtype).at[active].set(take)
+        delivered = delivered + take[diag_mid, diag_col].sum()
+        take = take.at[diag_mid, diag_col].set(0.0)
+        conv2 = jnp.zeros((n, widths[2]), q0.dtype).at[active].set(take)
 
         # -- injection -------------------------------------------------
         src = src + inj
@@ -562,22 +750,22 @@ def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
         q_inj = src * frac[:, None]
         src = src - q_inj
 
-        # -- decision --------------------------------------------------
+        # -- decision (fused kernel: q_min + threshold + mask) ---------
         cand = arr[0] + q_inj
         if mode == "minimal":
             div_eff = jnp.zeros_like(cand)
         else:
             if mode == "valiant":
-                div_ind = jnp.ones_like(cand)
+                div_cand = cand
             else:
                 b0 = jnp.maximum(o[0] - cap, 0.0).reshape(n, k)
                 b1 = jnp.maximum(o[1] - cap, 0.0).reshape(n, k)
-                q_min = jnp.einsum("nk,nkm->nm", b0, split3)
                 q_val = (b1 * w_val).sum(axis=1)
-                div_ind = (dist_act * q_min
-                           > thr + hval_rem * q_val[:, None]
-                           ).astype(q0.dtype)
-            div_cand = cand * div_ind
+                ctm = tile_sums(cand.sum(axis=0), 0)
+                div_cand = fused_decision(
+                    b0, split3_v[0], dist_c, hval_c, cand, q_val,
+                    (ctm > 0).astype(jnp.int32), thr=float(thr),
+                    interpret=interpret)
             occ1_now = rowfwd(1) + arr[1].sum(axis=1)
             space1 = jnp.maximum(buf - occ1_now, 0.0)
             desire1 = div_cand.sum(axis=1)
@@ -610,11 +798,11 @@ def _make_step_kernel(t: RouteTables, cfg: SimConfig, dtype, interpret):
         for v in range(3):
             fac2 = (1.0 - share * damp[v]).reshape(n, k)
             corr2 = (share * (1.0 - damp[v])).reshape(n, k)
-            mass = tile_sums(qs[v].reshape(nk, m).sum(axis=0)
-                             + inflow[v].sum(axis=0))
+            mass = tile_sums(qs[v].reshape(nk, widths[v]).sum(axis=0)
+                             + inflow[v].sum(axis=0), v)
             tmask = (mass > 0).astype(jnp.int32)
-            qn, on = fused_step_update(qs[v], split3, deliver, fac2,
-                                       corr2, inflow[v], tmask,
+            qn, on = fused_step_update(qs[v], split3_v[v], deliver_v[v],
+                                       fac2, corr2, inflow[v], tmask,
                                        interpret=interpret)
             occ = occ + on.sum()
             new_qs.append(qn)

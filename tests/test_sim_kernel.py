@@ -6,8 +6,12 @@ Parity contract: the dense numpy float64 engine is the oracle.
 numpy (bit-level comparable at float64); ``backend="pallas_interpret"``
 runs the actual pallas kernel through the interpreter — same fluid, TPU
 summation order, so float64 agreement to round-off.  Dest compaction
-(minimal routing only) must be EXACT: dropping never-addressed dest
-columns is a reindexing, not an approximation.
+must be EXACT in both shapes: the minimal-mode active-set shrink, and
+the ugal/valiant per-VC compacted dest axis (q0/q2/src/pend-dest on the
+demanded columns, q1/stage2 on the full mid axis) — dropping
+never-addressed dest columns is a reindexing, not an approximation.
+The fused UGAL decision and the sim_workers threaded slab loop must be
+bitwise identical to their serial dense counterparts.
 
 The reporting regressions pinned here:
   * run histories are normalized per fault segment (a pre-event curve
@@ -117,13 +121,156 @@ def test_sparse_dest_compaction_is_exact():
     _histories_close(a, b, rtol=1e-9)
 
 
-def test_compaction_gated_to_minimal():
-    """ugal spreads diversions over the whole active set; compaction
-    would change the intermediate pool, so it must not trigger."""
+def _sparse_cols_demand(g, seed, n_cols=5, n_srcs=6):
+    """Demand addressing only a scattered subset of dest columns — the
+    shape the per-VC compacted dest axis exists for."""
+    rng = np.random.default_rng(seed)
+    cols = np.sort(rng.choice(g.n, size=n_cols, replace=False))
+    dem = np.zeros((g.n, g.n))
+    for c in cols:
+        srcs = rng.choice(g.n, size=n_srcs, replace=False)
+        dem[srcs, c] = rng.random(n_srcs)
+    np.fill_diagonal(dem, 0.0)
+    return normalize_demand(dem)
+
+
+@pytest.mark.parametrize("routing", ["ugal_threshold(0)", "valiant"])
+def test_compacted_adaptive_matches_dense_float64(routing):
+    """The per-VC compacted dest axis under adaptive routing against the
+    all-columns dense float64 oracle — finite buffers and a mid-run
+    FaultSet event included, so the compacted surgery path is covered."""
+    dem = _sparse_cols_demand(G16, 11)
+    fs = random_faults(G16, k_links=3, seed=5)
+    a = _run_backend(G16, dem, "numpy", routing, offered=0.6, steps=24,
+                     buffer=6.0, events=[(8, fs)])
+    cfg = SimConfig(routing=routing, backend="pallas", dtype="float64",
+                    buffer=6.0)
+    sim = Simulator(G16, cfg, demand=dem)
+    assert sim.dest_cols is not None and len(sim.dest_cols) < G16.n
+    assert len(sim.active) == G16.n      # the active set stays whole
+    b = sim.run(dem, 0.6, 24, events=[(8, fs)])
+    _histories_close(a, b, rtol=1e-9)
+    assert b.residual < 1e-7
+
+
+def test_compacted_run_rejects_foreign_demand():
+    """A compacted Simulator must refuse a demand addressing columns it
+    dropped, not silently lose the fluid."""
+    dem = _sparse_cols_demand(G16, 11)
+    cfg = SimConfig(routing="ugal_threshold(0)", backend="pallas",
+                    dtype="float64")
+    sim = Simulator(G16, cfg, demand=dem)
+    other = _uniform(G16)
+    with pytest.raises(ValueError, match="compact"):
+        sim.run(other, 0.5, 8)
+
+
+def test_sim_workers_bitwise_deterministic(monkeypatch):
+    """Slab units write disjoint output column ranges: any sim_workers
+    count must produce bit-identical histories (threshold forced to 0 so
+    the small fixture actually threads)."""
+    import repro.sim.kernel as K
+    from repro.perf import flags
+    monkeypatch.setattr(K, "SIM_THREAD_MIN_CELLS", 0)
+    dem = _random_demand(G16, 3)
+    out = {}
+    for w in (1, 4):
+        monkeypatch.setattr(flags(), "sim_workers", w)
+        out[w] = _run_backend(G16, dem, "pallas", "ugal_threshold(0)",
+                              offered=0.7, buffer=6.0)
+    for key in ("delivered", "accepted", "offered", "occupancy",
+                "src_backlog", "diverted"):
+        np.testing.assert_array_equal(
+            out[1].history[key], out[4].history[key],
+            err_msg=f"history[{key!r}] not bitwise equal across workers")
+
+
+def test_fused_decision_interior_blend_parity():
+    """torus2d_8x16 tornado at ugal_threshold(0): the blend optimum is
+    interior (0 < alpha < 1), so both branches of the fused decision —
+    divert and keep — carry fluid.  Blocked fused decision vs the dense
+    einsum decision, float64."""
+    g = torus3d_graph(8, 16, 1)
+    dem = normalize_demand(make_pattern("tornado").demand(g, None))
+    a = _run_backend(g, dem, "numpy", "ugal_threshold(0)", offered=0.38,
+                     steps=40)
+    b = _run_backend(g, dem, "pallas", "ugal_threshold(0)", offered=0.38,
+                     steps=40)
+    _histories_close(a, b, rtol=1e-9)
+    assert 0.0 < a.alpha < 1.0       # both decision branches were live
+
+
+def test_ugal_keeps_active_set_but_compacts_dest_axis():
+    """ugal spreads diversions over the whole active set — the active
+    set must stay whole — while the FINAL-dest axes compact to the
+    demanded columns on the fused backends (and only there)."""
     dem = np.zeros((G16.n, G16.n))
     dem[0, 1] = dem[1, 0] = 1.0
     cfg = SimConfig(routing="ugal_threshold(0)", backend="pallas")
-    assert len(Simulator(G16, cfg, demand=dem).active) == G16.n
+    sim = Simulator(G16, cfg, demand=dem)
+    assert len(sim.active) == G16.n
+    assert sorted(sim.dest_cols) == [0, 1]
+    # dense backends have no index-mapped views: every column stays
+    cfg = SimConfig(routing="ugal_threshold(0)", backend="numpy")
+    assert Simulator(G16, cfg, demand=dem).dest_cols is None
+    # compact="off" is the all-columns baseline on the fused path too
+    cfg = SimConfig(routing="ugal_threshold(0)", backend="pallas",
+                    compact="off")
+    assert Simulator(G16, cfg, demand=dem).dest_cols is None
+
+
+def test_guard_and_auto_sized_from_compacted_cells(monkeypatch):
+    """Backend auto-selection and the SIM_MAX_CELLS guard see the state
+    that will actually be allocated: post-shrink dense cells under
+    minimal, so a sparse-demand instance over the cap runs dense; under
+    ugal the dense guard still fires while auto escalates to the fused
+    path and compacts the dest axis."""
+    import repro.sim as S
+    import repro.sim.engine as E
+    dem = np.zeros((G16.n, G16.n))
+    dem[0, 1] = dem[1, 0] = 1.0
+    cells_full = G16.n * G16.max_degree * G16.n
+    monkeypatch.setattr(S, "SIM_MAX_CELLS", cells_full - 1)
+    monkeypatch.setattr(E, "SIM_MAX_CELLS", cells_full - 1)
+    # minimal: the active set shrinks to 2 columns BEFORE the guard
+    sim = Simulator(G16, SimConfig(backend="numpy"), demand=dem)
+    assert len(sim.active) == 2
+    # without a demand there is nothing to shrink: the guard still fires
+    with pytest.raises(ValueError, match="pallas"):
+        Simulator(G16, SimConfig(backend="numpy"))
+    # ugal keeps every dense cell on dense backends...
+    with pytest.raises(ValueError, match="pallas"):
+        Simulator(G16, SimConfig(routing="ugal_threshold(0)",
+                                 backend="numpy"), demand=dem)
+    # ...while auto escalates to the fused path and compacts
+    sim = Simulator(G16, SimConfig(routing="ugal_threshold(0)"),
+                    demand=dem)
+    assert sim.backend == "pallas" and len(sim.dest_cols) == 2
+
+
+def test_per_dest_stability_fields():
+    """per_dest=True fills the per-dest-column stability fields; a run
+    far below saturation reads ~1 on every column, and the fields stay
+    NaN unless asked for."""
+    dem = _sparse_cols_demand(G16, 2)
+    cfg = SimConfig(routing="minimal", backend="numpy", dtype="float64")
+    sim = Simulator(G16, cfg, demand=dem)
+    r = sim.run(dem, 0.3, 30, per_dest=True)
+    assert np.isfinite(r.dest_stability_min)
+    assert r.dest_stability_min >= 0.98
+    assert r.dest_stability_mean >= r.dest_stability_min
+    assert np.isnan(sim.run(dem, 0.3, 30).dest_stability_min)
+
+
+def test_per_dest_knee_sweep():
+    sw = saturation_sweep(G16, "uniform", routing="minimal",
+                          loads=[0.2], steps=24, refine=0,
+                          knee="per_dest")
+    assert sw.knee == "per_dest"
+    assert all(np.isfinite(r.dest_stability_min) for r in sw.runs)
+    assert sw.theta > 0
+    with pytest.raises(ValueError, match="knee"):
+        saturation_sweep(G16, "uniform", loads=[0.2], knee="sharpest")
 
 
 def test_backend_and_dtype_resolution():
