@@ -6,6 +6,10 @@ iterates on (no real-TPU timings exist in this container).
 Usage:
   PYTHONPATH=src python -m benchmarks.hlo_breakdown --arch deepseek-v3-671b \
       --shape train_4k [--top 25] [--layers 1]
+
+``breakdown()`` is the library face (benchmarks.run wires it in as the
+``hlo`` section): it returns the ranked tables as a JSON-safe dict and
+leaves the printing to :func:`main`.
 """
 
 import os
@@ -20,29 +24,33 @@ OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
     r"([a-z0-9-]+)\(")
 
+# bookkeeping ops whose result bytes say nothing about data movement
+_SKIP_KINDS = ("parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast")
 
-def main():
-    from repro.launch.dryrun import (SHAPE_RE, DTYPE_BYTES, _compile_metrics,
-                                     _shape_bytes, _lower_any)
+
+def breakdown(arch: str, shape: str = "train_4k", top: int = 25,
+              layers: int = 1, multi_pod: bool = False) -> dict:
+    """Compile the (arch × shape) probe layer and rank its HLO ops by
+    result bytes.  Returns a JSON-safe dict:
+
+    ``{"arch", "shape", "mesh", "flops_per_device",
+    "bytes_per_device", "by_kind": [{"kind", "bytes", "count"}, ...],
+    "largest": [{"bytes", "kind", "shape"}, ...],
+    "collectives": [...same rows...]}``
+    """
     from repro.configs import SHAPES, get_arch
+    from repro.launch.dryrun import _lower_any, _shape_bytes
     from repro.launch.mesh import make_production_mesh
     from repro.models.transformer import layer_plan
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
-    ap.add_argument("--top", type=int, default=25)
-    ap.add_argument("--layers", type=int, default=1, help="unrolled periods")
-    ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
-
-    cfg = get_arch(args.arch)
+    cfg = get_arch(arch)
     plan = layer_plan(cfg)
-    probe = cfg.replace(n_layers=plan.prefix + args.layers * plan.period,
+    probe = cfg.replace(n_layers=plan.prefix + layers * plan.period,
                         scan_layers=False)
-    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
     with mesh:
-        lowered = _lower_any(probe, SHAPES[args.shape], mesh)
+        lowered = _lower_any(probe, SHAPES[shape], mesh)
         compiled = lowered.compile()
     text = compiled.as_text()
 
@@ -54,8 +62,7 @@ def main():
         if not m:
             continue
         shape_str, kind = m.group(1), m.group(2)
-        if kind in ("parameter", "constant", "tuple", "get-tuple-element",
-                    "bitcast"):
+        if kind in _SKIP_KINDS:
             continue
         nbytes = _shape_bytes(shape_str)
         by_kind_bytes[kind] += nbytes
@@ -63,21 +70,60 @@ def main():
         biggest.append((nbytes, kind, shape_str.strip()[:90]))
 
     cost = compiled.cost_analysis()
-    print(f"# {args.arch} x {args.shape} probe ({args.layers} period(s), "
-          f"mesh {'2x16x16' if args.multi_pod else '16x16'})")
-    print(f"flops/device={cost.get('flops', 0):.4e}  "
-          f"bytes/device={cost.get('bytes accessed', 0):.4e}")
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
+    if cost is None:
+        cost = {}
+    rows = [{"bytes": int(n), "kind": k, "shape": s}
+            for n, k, s in sorted(biggest, reverse=True)[:top]]
+    coll = [{"bytes": int(n), "kind": k, "shape": s}
+            for n, k, s in sorted(
+                (b for b in biggest if "all-" in b[1] or "collective" in b[1]
+                 or "reduce-scatter" in b[1]), reverse=True)[:top]]
+    return {
+        "arch": arch,
+        "shape": shape,
+        "layers": int(layers),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "flops_per_device": float(cost.get("flops", 0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0)),
+        "by_kind": [{"kind": k, "bytes": int(v),
+                     "count": int(by_kind_count[k])}
+                    for k, v in by_kind_bytes.most_common(top)],
+        "largest": rows,
+        "collectives": coll,
+    }
+
+
+def main():
+    from repro.configs import SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--layers", type=int, default=1, help="unrolled periods")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    out = breakdown(args.arch, args.shape, top=args.top, layers=args.layers,
+                    multi_pod=args.multi_pod)
+    print(f"# {out['arch']} x {out['shape']} probe ({out['layers']} "
+          f"period(s), mesh {out['mesh']})")
+    print(f"flops/device={out['flops_per_device']:.4e}  "
+          f"bytes/device={out['bytes_per_device']:.4e}")
     print("\n## result bytes by op kind (per device)")
-    for kind, v in by_kind_bytes.most_common(args.top):
-        print(f"{kind:26s} {v/2**30:10.3f} GiB  x{by_kind_count[kind]}")
+    for row in out["by_kind"]:
+        print(f"{row['kind']:26s} {row['bytes']/2**30:10.3f} GiB  "
+              f"x{row['count']}")
     print("\n## largest single ops")
-    for nbytes, kind, shape in sorted(biggest, reverse=True)[: args.top]:
-        print(f"{nbytes/2**30:10.3f} GiB  {kind:22s} {shape}")
+    for row in out["largest"]:
+        print(f"{row['bytes']/2**30:10.3f} GiB  {row['kind']:22s} "
+              f"{row['shape']}")
     print("\n## collectives")
-    for nbytes, kind, shape in sorted(
-            (b for b in biggest if "all-" in b[1] or "collective" in b[1]
-             or "reduce-scatter" in b[1]), reverse=True)[: args.top]:
-        print(f"{nbytes/2**30:10.3f} GiB  {kind:22s} {shape}")
+    for row in out["collectives"]:
+        print(f"{row['bytes']/2**30:10.3f} GiB  {row['kind']:22s} "
+              f"{row['shape']}")
 
 
 if __name__ == "__main__":

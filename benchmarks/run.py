@@ -71,7 +71,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only",
                     choices=["tables", "figures", "traffic", "routing",
                              "placement", "sim", "faults", "kernels",
-                             "all"],
+                             "hlo", "all"],
                     default="all",
                     help="restrict to the paper tables, figures, the "
                          "traffic-pattern saturation sweep, the "
@@ -79,7 +79,9 @@ def main(argv=None) -> None:
                          "placement strategy/fragmentation table, the "
                          "simulator parity table (BENCH_5), the "
                          "fault degradation curves (BENCH_6), or the "
-                         "fused step kernel rows (BENCH_7)")
+                         "fused step kernel rows (BENCH_7); 'hlo' (the "
+                         "compile-and-rank op breakdown) runs only when "
+                         "named explicitly — it is NOT part of 'all'")
     ap.add_argument("--err-budget", type=float, default=0.25, metavar="E",
                     help="fail (exit 1) when any entry's max_rel_err exceeds "
                          "E instead of only recording it (negative: record "
@@ -90,24 +92,41 @@ def main(argv=None) -> None:
                          "'obs' in the JSON payload (default: trace with "
                          "per-step series capture OFF, so span/counter "
                          "recording stays out of the hot loops)")
+    ap.add_argument("--stream", metavar="PATH", default=None,
+                    help="append live JSONL telemetry (section boundaries "
+                         "+ in-section progress/probe events) to PATH "
+                         "while the run is going; tail -f it to watch a "
+                         "long benchmark instead of waiting for the JSON")
     args = ap.parse_args(argv)
 
     records: list[dict] = []
     errors: list[dict] = []
     obs_by_section: dict[str, dict] = {}
+    streamer = None
+    if args.stream:
+        from repro.obs import ObsStreamer
+        streamer = ObsStreamer(args.stream)
     print("name,us_per_call,derived")
 
     def section(name, body):
         """Run one bench section; a crash is reported and recorded but
         never takes the other sections (or the JSON artifact) with it.
         Each section gets its own obs session so the embedded span/metric
-        snapshot attributes the work to the section that did it."""
+        snapshot attributes the work to the section that did it.  The
+        shared ``--stream`` file (when open) receives the section
+        boundaries directly and rides into each session so in-section
+        emitters (sweep probes, Progress) stream through it too."""
+        t0 = time.perf_counter()
+        if streamer is not None:
+            streamer.emit("section", name=name, state="start")
+        ok = True
         try:
             if args.obs == "none":
                 body()
                 return
             from repro import obs
-            with obs.session(mode=args.obs, series=False) as sess:
+            with obs.session(mode=args.obs, series=False,
+                             stream=streamer) as sess:
                 try:
                     body()
                 finally:
@@ -115,11 +134,16 @@ def main(argv=None) -> None:
                     if snap is not None:
                         obs_by_section[name] = snap
         except Exception as e:
+            ok = False
             print(f"# SECTION FAILED [{name}]: {type(e).__name__}: {e}",
                   file=sys.stderr)
             errors.append({"section": name,
                            "error": f"{type(e).__name__}: {e}",
                            "traceback": traceback.format_exc()})
+        finally:
+            if streamer is not None:
+                streamer.emit("section", name=name, state="end", ok=ok,
+                              seconds=round(time.perf_counter() - t0, 3))
 
     def run_tables():
         from . import paper_tables as tabs
@@ -244,12 +268,25 @@ def main(argv=None) -> None:
         _run(records, "fig9_pn_vs_slimfly", figs.fig9,
              lambda o: f"demi_pn_worse_than_sf_cases={o[1]:.0f}")
 
+    def run_hlo():
+        # compile-and-rank op breakdown for the smallest arch; explicit
+        # --only hlo opt-in (a full XLA compile is far slower than any
+        # paper table, so it never rides under "all")
+        from . import hlo_breakdown as hb
+        out = _run(records, "hlo[smollm-135m:train_4k]",
+                   lambda: hb.breakdown("smollm-135m", "train_4k", top=10),
+                   lambda o: (f"flops={o['flops_per_device']:.3e}"
+                              f" kinds={len(o['by_kind'])}"
+                              f" collectives={len(o['collectives'])}"))
+        records[-1]["row"] = out
+
     sections = [("tables", run_tables), ("traffic", run_traffic),
                 ("routing", run_routing), ("sim", run_sim),
                 ("placement", run_placement), ("faults", run_faults),
-                ("kernels", run_kernels), ("figures", run_figures)]
+                ("kernels", run_kernels), ("figures", run_figures),
+                ("hlo", run_hlo)]
     for name, body in sections:
-        if args.only in (name, "all"):
+        if args.only == name or (args.only == "all" and name != "hlo"):
             section(name, body)
 
     if args.only == "all":
@@ -307,6 +344,10 @@ def main(argv=None) -> None:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {args.json} ({len(records)} entries, "
               f"{len(errors)} section errors)")
+
+    if streamer is not None:
+        streamer.emit("done", entries=len(records), errors=len(errors))
+        streamer.close()
 
     failed = False
     if args.err_budget >= 0:

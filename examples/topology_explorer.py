@@ -157,8 +157,20 @@ def main():
                          "write it as Chrome-trace JSON (load in "
                          "chrome://tracing or ui.perfetto.dev); also prints "
                          "the top-5 spans by total time")
+    ap.add_argument("--metrics", action="store_true",
+                    help="capture repro.obs metrics over the run and print "
+                         "the snapshot table (counters, gauges, histogram "
+                         "summaries) at the end")
+    ap.add_argument("--report", default=None, metavar="OUT.html",
+                    help="write a single-file HTML report of the run's obs "
+                         "session (gauge tiles, span table, per-step series "
+                         "sparklines); implies metrics capture")
     args = ap.parse_args()
-    sess_cm = (obs.session(mode="trace") if args.trace
+    want_obs = args.trace or args.metrics or args.report
+    # full tracing when asked for a trace or a report (the report's span
+    # table and series sparklines need it); metrics-only otherwise
+    mode = "trace" if (args.trace or args.report) else "metrics"
+    sess_cm = (obs.session(mode=mode) if want_obs
                else contextlib.nullcontext(None))
     with sess_cm as sess:
         if args.topology:
@@ -185,6 +197,27 @@ def main():
         print("top spans by total time:")
         for name, total_s, count in sess.top_spans(5):
             print(f"  {name:32s} {count:6d}x  total {total_s*1e3:9.2f} ms")
+    if args.metrics and sess is not None and sess.enabled:
+        print("\nmetrics snapshot:")
+        snap = sess.metrics.snapshot()
+        for name in sorted(snap):
+            rec = snap[name]
+            kind = rec.get("type")
+            if kind in ("counter", "gauge"):
+                print(f"  {name:40s} {rec['value']:12.4f}  ({kind})")
+            else:
+                print(f"  {name:40s} count={rec.get('count', 0):<6d} "
+                      f"mean={rec.get('mean', 0.0):.4g} "
+                      f"p99={rec.get('p99', 0.0):.4g}  ({kind})")
+    if args.report and sess is not None and sess.enabled:
+        from repro.obs import report as obs_report
+        label = args.topology or ("compare" if args.compare else "default")
+        obs_report.render_report(
+            args.report,
+            sessions=[(label, sess.snapshot(),
+                       obs_report.session_series(sess))],
+            title=f"topology explorer — {label}")
+        print(f"\nreport written to {args.report}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 TIER1_BUDGET="${CI_TIER1_BUDGET:-600}"         # seconds
+OBS_BUDGET="${CI_OBS_BUDGET:-300}"             # seconds
 SLOW_BUDGET="${CI_SLOW_BUDGET:-600}"           # seconds
 BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"         # seconds
 ROUTING_BUDGET="${CI_ROUTING_BUDGET:-300}"     # seconds
@@ -120,5 +121,15 @@ snapshot_bench BENCH_7.json
 timeout "$KERNEL_BUDGET" python -m benchmarks.run --json BENCH_7.json \
     --only kernels --err-budget 0.025
 compare_bench BENCH_7.json
+
+echo "== observability: watchdog smoke + HTML report artifact (budget ${OBS_BUDGET}s) =="
+# drives a seeded past-knee pn16 run that MUST fire the dest-stability
+# watchdog and write a postmortem bundle (exit 1 when it stays silent —
+# a dead watchdog is a regression), verifies the bundle's ring-buffer
+# channels replay the run history bit-exactly, then renders report.html:
+# the BENCH_2-7 trajectory (deltas vs the artifacts just refreshed
+# above), the smoke session's balance gauges/series, and the bundle
+timeout "$OBS_BUDGET" python scripts/obs_smoke.py \
+    --report report.html --bench-dir .
 
 echo "== ci.sh green =="

@@ -1,0 +1,100 @@
+"""Observability smoke for CI: drive a seeded past-knee simulation that
+MUST fire the per-dest stability watchdog, check the postmortem bundle
+round-trips bit-exactly against the run's own history, and render the
+single-file HTML report artifact (BENCH trajectory + the smoke session +
+the bundle).
+
+Exit codes: 0 all good; 1 the watchdog did not fire (or the bundle
+failed verification) — a silent-watchdog regression fails the build; 2
+setup errors.
+
+    PYTHONPATH=src python scripts/obs_smoke.py --report report.html \
+        --bench-dir .
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+# pn16 uniform analytic theta under minimal/UGAL is ~6.97 link-equivalents
+# per node; 2x that offered load is comfortably past the knee, so the
+# delivered/offered stability ratio must collapse and the watchdog fires
+_PN_Q = 16
+_THETA_PN16_UNIFORM = 6.9714
+_OFFERED_FACTOR = 2.0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--report", default="report.html", metavar="OUT.html")
+    ap.add_argument("--bench-dir", default=".", metavar="PATH",
+                    help="directory whose BENCH_*.json trajectory the "
+                         "report renders (default: cwd)")
+    ap.add_argument("--dir", default="postmortems", metavar="PATH",
+                    help="postmortem bundle directory")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--stream", default=None, metavar="OUT.jsonl",
+                    help="also stream live telemetry events")
+    args = ap.parse_args(argv)
+
+    from repro import obs, sim
+    from repro.core import pn_graph
+    from repro.obs import report as obs_report
+
+    g = pn_graph(_PN_Q)
+    d = np.ones((g.n, g.n)) - np.eye(g.n)
+    demand = d / d.sum(axis=1, keepdims=True)
+    offered = _OFFERED_FACTOR * _THETA_PN16_UNIFORM
+
+    rec = obs.FlightRecorder(window=24)
+    wd = obs.Watchdog(
+        [obs.dest_stability(ratio=0.8, window=16, warmup=16)],
+        action="continue", dir=args.dir)
+    simr = sim.Simulator(g, sim.SimConfig(routing="ugal_threshold(0)",
+                                          backend="pallas"))
+    with obs.session(mode="trace", series=True, recorder=rec, watchdog=wd,
+                     stream=args.stream) as sess:
+        with obs.span("obs_smoke.run", offered=float(offered)):
+            run = simr.run(demand, offered, steps=args.steps)
+        snap = sess.snapshot()
+        series = obs_report.session_series(sess)
+
+    if not wd.fired:
+        print("# FAIL: past-knee probe did not fire the dest-stability "
+              "watchdog (no postmortem bundle written)", file=sys.stderr)
+        return 1
+    name, path = wd.fired[0]
+    print(f"# watchdog fired: {name} -> {path}")
+
+    # the bundle's ring-buffer channels must replay the run's own history
+    # bit-exactly (the flight-recorder contract docs/observability.md pins)
+    bundle = obs.load_bundle(path)
+    brec = bundle["recorder"]
+    steps_idx = np.asarray(brec["steps"], dtype=np.int64)
+    bad = []
+    for key in ("delivered", "accepted", "offered", "occupancy",
+                "src_backlog", "diverted"):
+        got = np.asarray(brec["channels"][key], dtype=np.float64)
+        want = np.asarray(run.history[key], dtype=np.float64)[steps_idx]
+        if not np.array_equal(got, want):
+            bad.append(key)
+    if bad:
+        print(f"# FAIL: bundle channels diverge from run.history: {bad}",
+              file=sys.stderr)
+        return 1
+    print(f"# bundle verified bit-exact over {len(steps_idx)} steps x "
+          f"{len(brec['channels'])} channels")
+
+    obs_report.render_report(
+        args.report, bench_dir=args.bench_dir,
+        sessions=[("obs_smoke", snap, series)], bundles=[bundle],
+        title="repro CI observability report")
+    print(f"# wrote {args.report}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -107,6 +107,7 @@ def _evaluate_specs(g, specs, models, engine, targets_mask, faults=None):
             raise ValueError("fewer than 2 active vertices survive the "
                              "faults")
         out = {}
+        prog = obs.Progress("adversary.candidates", total=len(specs))
         for spec in specs:
             obs.counter("adversary.candidates").add(1.0)
             with obs.span("adversary.candidate", pattern=str(spec),
@@ -117,13 +118,16 @@ def _evaluate_specs(g, specs, models, engine, targets_mask, faults=None):
                     raise ValueError(
                         f"faults removed every demand of {spec!r}")
                 out[spec] = evaluate_models(gd, dem, act_d, models, engine)
+            prog.step(pattern=str(spec), faulted=True)
         return out
     out = {}
+    prog = obs.Progress("adversary.candidates", total=len(specs))
     for spec in specs:
         obs.counter("adversary.candidates").add(1.0)
         with obs.span("adversary.candidate", pattern=str(spec)):
             demand = normalize_demand(make_pattern(spec).demand(g, mask))
             out[spec] = evaluate_models(g, demand, active, models, engine)
+        prog.step(pattern=str(spec))
     return out
 
 

@@ -478,6 +478,7 @@ def degradation_sweep(g: Graph, k_failures=(0, 1, 2, 5), trials: int = 8,
                                      engine=engine,
                                      targets_mask=targets_mask).theta
         thetas = np.empty((int(trials), len(ks)), dtype=np.float64)
+        prog = obs.Progress("faults.trials", total=int(trials) * len(ks))
         for t in range(int(trials)):
             rng = np.random.default_rng(
                 np.random.SeedSequence([int(seed), t]))
@@ -485,6 +486,7 @@ def degradation_sweep(g: Graph, k_failures=(0, 1, 2, 5), trials: int = 8,
             for j, k in enumerate(ks):
                 if k == 0:
                     thetas[t, j] = pristine
+                    prog.step(trial=t, k=int(k))
                     continue
                 if kind == "links":
                     fs = FaultSet(links=_links_from_edges(g, perm[:k]))
@@ -493,6 +495,7 @@ def degradation_sweep(g: Graph, k_failures=(0, 1, 2, 5), trials: int = 8,
                 thetas[t, j] = degraded_report(
                     g, pattern, fs, routing=routing, engine=engine,
                     targets_mask=targets_mask).theta
+                prog.step(trial=t, k=int(k), theta=float(thetas[t, j]))
     bands = {int(p): np.percentile(thetas, p, axis=0) for p in percentiles}
     return DegradationSweep(
         pattern=str(pattern), routing=str(routing), kind=kind, k_failures=ks,

@@ -43,14 +43,22 @@ from __future__ import annotations
 
 from contextlib import contextmanager
 
+from .export import ObsStreamer, Progress, openmetrics_text, write_openmetrics
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, Series,
                       balance_stats)
+from .recorder import FlightRecorder
 from .trace import NULL_SESSION, NULL_SPAN, Session, Span
+from .watchdog import (Watchdog, WatchdogFired, dest_stability, load_bundle,
+                       nonfinite, oscillation, residual, step_time)
 
 __all__ = [
     "Session", "Span", "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "Series", "balance_stats", "session", "current", "span", "timed",
     "counter", "gauge", "histogram", "series", "NULL_SPAN", "NULL_SESSION",
+    "FlightRecorder", "Watchdog", "WatchdogFired", "residual", "nonfinite",
+    "dest_stability", "step_time", "oscillation", "load_bundle",
+    "ObsStreamer", "Progress", "openmetrics_text", "write_openmetrics",
+    "emit", "recorder", "watchdog",
 ]
 
 # innermost active session last; module-global so the fast path is one
@@ -65,25 +73,34 @@ def current():
 
 @contextmanager
 def session(mode: str | None = None, registry: MetricsRegistry | None = None,
-            series: bool | None = None):
+            series: bool | None = None, recorder=None, watchdog=None,
+            stream=None):
     """Enter an observability session.  ``mode`` None resolves from the
     ``obs`` perf flag (``REPRO_PERF=obs=none|metrics|trace``); mode
     ``none`` yields the inert :data:`NULL_SESSION` without installing
     anything.  ``series`` forces per-step series capture on/off (default:
     on only under ``trace`` — the per-step host work is the expensive
-    part; see docs/observability.md)."""
+    part; see docs/observability.md).
+
+    ``recorder`` arms a :class:`FlightRecorder` ring buffer,
+    ``watchdog`` a :class:`Watchdog` (bound to this session so its
+    postmortem bundles snapshot the recorder/spans/metrics), and
+    ``stream`` opens live JSONL telemetry (an :class:`ObsStreamer` or a
+    path string — a string is owned and closed on session exit)."""
     if mode is None:
         from ..perf import flags
         mode = flags().obs
     if mode in (None, "", "none", "off", False, 0):
         yield NULL_SESSION
         return
-    s = Session(mode, registry, series=series)
+    s = Session(mode, registry, series=series, recorder=recorder,
+                watchdog=watchdog, stream=stream)
     _STACK.append(s)
     try:
         yield s
     finally:
         _STACK.remove(s)
+        s.close()
 
 
 class _NullMetric:
@@ -150,3 +167,29 @@ def histogram(name: str):
 def series(name: str):
     s = _STACK[-1] if _STACK else None
     return NULL_METRIC if s is None else s.metrics.series(name)
+
+
+def recorder():
+    """The active session's :class:`FlightRecorder`, or None — same
+    one-global-read fast path as :func:`span` when obs is off."""
+    s = _STACK[-1] if _STACK else None
+    return None if s is None else s.recorder
+
+
+def watchdog():
+    """The active session's :class:`Watchdog`, or None."""
+    s = _STACK[-1] if _STACK else None
+    return None if s is None else s.watchdog
+
+
+def emit(kind: str, **fields) -> None:
+    """Stream one telemetry event through the active session's
+    :class:`ObsStreamer` — a no-op (one global read, no allocation)
+    without a streaming session.  The live-progress verb behind
+    :class:`Progress` and the sweep/adversary/faults emitters."""
+    s = _STACK[-1] if _STACK else None
+    if s is None:
+        return
+    st = s.stream
+    if st is not None:
+        st.emit(kind, **fields)

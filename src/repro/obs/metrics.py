@@ -26,17 +26,25 @@ __all__ = ["Counter", "Gauge", "Histogram", "Series", "MetricsRegistry",
 
 class Counter:
     """Monotone accumulator (``add``); float-valued so fluid mass and
-    call counts share one type."""
+    call counts share one type.
 
-    __slots__ = ("name", "value")
+    Mutation takes a per-metric lock: the threaded CPU slab loop
+    (``perf.flags().sim_workers > 1``) can publish wave telemetry from
+    worker threads, and ``self.value += v`` is a read-modify-write that
+    loses increments under free-threaded interleaving.  The lock only
+    costs when a session is active (obs off hands out NULL_METRIC)."""
+
+    __slots__ = ("name", "value", "_lock")
     kind = "counter"
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def add(self, v: float = 1.0) -> None:
-        self.value += v
+        with self._lock:
+            self.value += v
 
     def snapshot(self) -> dict:
         return {"type": "counter", "value": float(self.value)}
@@ -45,15 +53,18 @@ class Counter:
 class Gauge:
     """Last-write-wins value (``set``)."""
 
-    __slots__ = ("name", "value")
+    __slots__ = ("name", "value", "_lock")
     kind = "gauge"
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self.value = float(v)
+        v = float(v)
+        with self._lock:
+            self.value = v
 
     def snapshot(self) -> dict:
         return {"type": "gauge", "value": float(self.value)}
@@ -68,15 +79,18 @@ class Series:
     ``np.asarray(series)``) programmatically.
     """
 
-    __slots__ = ("name", "values")
+    __slots__ = ("name", "values", "_lock")
     kind = "series"
 
     def __init__(self, name: str):
         self.name = name
         self.values: list[float] = []
+        self._lock = threading.Lock()
 
     def append(self, v: float) -> None:
-        self.values.append(float(v))
+        v = float(v)
+        with self._lock:
+            self.values.append(v)
 
     def __len__(self) -> int:
         return len(self.values)
@@ -97,25 +111,32 @@ class Histogram:
     """Value distribution; keeps raw observations (cheap at the volumes
     obs runs at) and summarizes to count/mean/percentiles on export."""
 
-    __slots__ = ("name", "_vals")
+    __slots__ = ("name", "_vals", "_lock")
     kind = "histogram"
 
     def __init__(self, name: str):
         self.name = name
         self._vals: list = []
+        self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
-        self._vals.append(float(v))
+        v = float(v)
+        with self._lock:
+            self._vals.append(v)
 
     def observe_many(self, values) -> None:
-        self._vals.append(np.asarray(values, dtype=np.float64).ravel())
+        a = np.asarray(values, dtype=np.float64).ravel()
+        with self._lock:
+            self._vals.append(a)
 
     @property
     def values(self) -> np.ndarray:
-        if not self._vals:
+        with self._lock:
+            vals = list(self._vals)
+        if not vals:
             return np.empty(0, dtype=np.float64)
         return np.concatenate([np.atleast_1d(np.asarray(v, np.float64))
-                               for v in self._vals])
+                               for v in vals])
 
     def snapshot(self) -> dict:
         a = self.values

@@ -120,13 +120,28 @@ class Session:
     :class:`MetricsRegistry`, both thread-safe.  ``mode`` is ``metrics``
     (counters/gauges/histograms only) or ``trace`` (spans too).  Install
     via :func:`repro.obs.session`; nesting pushes a stack and the
-    innermost session receives everything."""
+    innermost session receives everything.
+
+    Three optional attachments ride on the session (all None by
+    default, so the simulator's hot-loop hooks stay one attribute read
+    + ``is None`` test):
+
+    * ``recorder`` — a :class:`repro.obs.FlightRecorder`; the sim's
+      step monitor records its per-step channels into the ring buffer.
+    * ``watchdog`` — a :class:`repro.obs.Watchdog`; bound to this
+      session so its postmortem bundles snapshot the recorder, spans,
+      and metrics.
+    * ``stream`` — an :class:`repro.obs.ObsStreamer` (or a path string,
+      opened and owned by the session): live JSONL telemetry via
+      ``obs.emit`` / ``obs.Progress``.
+    """
 
     enabled = True
 
     def __init__(self, mode: str = "trace",
                  registry: MetricsRegistry | None = None,
-                 series: bool | None = None):
+                 series: bool | None = None,
+                 recorder=None, watchdog=None, stream=None):
         if mode not in ("metrics", "trace"):
             raise ValueError(f"unknown obs mode {mode!r}; "
                              f"options: none, metrics, trace")
@@ -136,11 +151,26 @@ class Session:
         # accumulation, ...) costs host work inside hot loops; default on
         # only under full tracing, overridable either way
         self.series = (mode == "trace") if series is None else bool(series)
+        self.recorder = recorder
+        self.watchdog = watchdog
+        if watchdog is not None:
+            watchdog.bind(self)
+        self._own_stream = isinstance(stream, str)
+        if self._own_stream:
+            from .export import ObsStreamer
+            stream = ObsStreamer(stream)
+        self.stream = stream
         self.events: list = []  # (name, t0_ns, dur_ns, tid, depth, attrs)
         self._t0_ns = time.perf_counter_ns()
         self._wall0 = time.time()
         self._lock = threading.Lock()
         self._tls = threading.local()
+
+    def close(self) -> None:
+        """Release owned resources (the stream, when opened from a path
+        string); called by ``obs.session`` on exit."""
+        if self._own_stream and self.stream is not None:
+            self.stream.close()
 
     @property
     def tracing(self) -> bool:
@@ -250,6 +280,9 @@ class _NullSession:
     series = False
     mode = "none"
     events: list = []
+    recorder = None
+    watchdog = None
+    stream = None
 
     def snapshot(self):
         return None
@@ -259,6 +292,9 @@ class _NullSession:
 
     def top_spans(self, k: int = 5) -> list:
         return []
+
+    def close(self) -> None:
+        pass
 
 
 NULL_SESSION = _NullSession()

@@ -37,7 +37,10 @@ threshold rule, and the exact parity conditions.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import hashlib
+import time
+from collections import deque
+from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
@@ -360,6 +363,25 @@ class Simulator:
         cap = (_SimCapture(sess, self.config, steps, window)
                if sess is not None and sess.enabled and sess.series
                else None)
+        # flight recorder + watchdog ride the same seam: armed only when
+        # the session carries them, `mon is None` is the whole cost
+        # otherwise (the obs-off overhead guard covers this hook too)
+        rec = sess.recorder if sess is not None and sess.enabled else None
+        wd = sess.watchdog if sess is not None and sess.enabled else None
+        if wd is not None and wd.exhausted:
+            wd = None
+        mon = None
+        if rec is not None or wd is not None:
+            if wd is not None:
+                fp = hashlib.sha256(
+                    np.ascontiguousarray(inj_norm).tobytes()).hexdigest()
+                wd.begin_run(config=asdict(self.config),
+                             backend=self.backend,
+                             offered=float(offered), steps=steps,
+                             window=window, n=t.n,
+                             dests=len(self.active),
+                             demand_fingerprint=fp[:16])
+            mon = _StepMonitor(rec, wd)
         # per-dest-column conservation over the trailing window (the
         # per-dest knee criterion): mass snapshots at the window edges
         # plus the offered inflow between them, exactly the accounting
@@ -385,11 +407,20 @@ class Simulator:
                 cap.set_segment(tb, inj_seg)
             off_dest = (np.asarray(inj_seg, np.float64).sum(axis=0)
                         if per_dest else None)
+            if mon is not None:
+                mon.set_segment(
+                    float(seg_total[s0]),
+                    (off_dest if off_dest is not None else
+                     np.asarray(inj_seg, np.float64).sum(axis=0))
+                    if mon.stab_win else None,
+                    dropped_total)
             for i in range(s0, s1):
                 st, stats = step_fn(st, inj_seg, inj_cap)
                 hist[i] = np.asarray(stats, dtype=np.float64)
                 if cap is not None:
                     cap.on_step(i, st, hist[i])
+                if mon is not None:
+                    mon.on_step(i, st, hist[i])
                 if per_dest and i >= win_start:
                     dm = _dest_mass_host(st)
                     if pd_mass0 is None:
@@ -611,6 +642,117 @@ class _SimCapture:
                     float(stab.mean()))
 
 
+class _StepMonitor:
+    """Flight-recorder + watchdog hook for one :meth:`Simulator._run`:
+    computes the shared per-step digests ONCE and feeds both.
+
+    Recorder channels mirror ``SimRun.history`` — delivered / accepted /
+    offered divided per step by the SAME per-segment norm the run's
+    post-loop normalization uses (IEEE float64 division is elementwise
+    deterministic, so a reloaded bundle window compares bit-exactly
+    against the history arrays), occupancy / src_backlog / diverted raw
+    — plus the per-VC occupancy sums and the running conservation
+    residual.  The per-dest mass digest (one host pass over the dest
+    tensors per step) is computed only when a dest_stability trigger is
+    armed; per-step wall time only when a step_time trigger is.
+    """
+
+    def __init__(self, rec, wd):
+        self.rec = rec
+        self.wd = wd
+        self.stab_win = wd.stability_window() if wd is not None else None
+        self.need_time = wd is not None and wd.needs("step_seconds")
+        self._mass_hist = (deque(maxlen=self.stab_win + 1)
+                          if self.stab_win else None)
+        self.norm = np.inf
+        self.off_dest = None
+        self.dropped = 0.0
+        self.inj_cum = 0.0
+        self.dlv_cum = 0.0
+        self._t_prev = time.perf_counter()
+
+    def set_segment(self, seg_total: float, off_dest, dropped: float):
+        self.norm = seg_total if seg_total > 0 else np.inf
+        self.off_dest = off_dest
+        self.dropped = dropped
+
+    def on_step(self, i: int, st, row) -> None:
+        dt = None
+        if self.need_time:
+            now = time.perf_counter()
+            dt = now - self._t_prev
+            self._t_prev = now
+        self.inj_cum += float(row[2])
+        self.dlv_cum += float(row[0])
+        # the run's conservation identity, evaluated live: at the final
+        # step this equals SimRun.residual up to summation order
+        residual = (abs(self.inj_cum - self.dlv_cum - float(row[3])
+                        - float(row[4]) - self.dropped)
+                    / max(self.inj_cum, 1e-30))
+        stab_min = float("nan")
+        stab_col = mass_min = None
+        arrs = None
+        if self.rec is not None or self._mass_hist is not None:
+            # one host view of the state per step; the digest sums below
+            # accumulate in float64 WITHOUT materializing float64 copies
+            # of the queue tensors (the fused backends run float32, and
+            # a per-step 8-byte copy of the whole state would dominate
+            # the monitor's cost)
+            arrs = tuple(np.asarray(a) for a in st)
+        if self._mass_hist is not None:
+            q0, _q1, q2, src, pend, _s2 = arrs
+            dm = (q0.sum(axis=(0, 1), dtype=np.float64)
+                  + q2.sum(axis=(0, 1), dtype=np.float64)
+                  + src.sum(axis=0, dtype=np.float64)
+                  + pend.sum(axis=0, dtype=np.float64))
+            mass_min = float(dm.min())
+            self._mass_hist.append(dm)
+            w, off = self.stab_win, self.off_dest
+            if len(self._mass_hist) == w + 1 and off is not None:
+                # delivered per column over the trailing window = mass
+                # drop + offered inflow (_SimCapture's bookkeeping
+                # identity, evaluated live each step)
+                delivered = self._mass_hist[0] - dm + off * w
+                sel = off > 0
+                if sel.any():
+                    stab = delivered[sel] / (off[sel] * w)
+                    j = int(np.argmin(stab))
+                    stab_min = float(stab[j])
+                    stab_col = int(np.nonzero(sel)[0][j])
+        if self.rec is not None:
+            q0, q1, q2, _src, _pend, stage2 = arrs
+            ch = {"delivered": float(row[0] / self.norm),
+                  "accepted": float(row[1] / self.norm),
+                  "offered": float(row[2] / self.norm),
+                  "occupancy": float(row[3]),
+                  "src_backlog": float(row[4]),
+                  "diverted": float(row[5]),
+                  "occ_vc0": float(q0.sum(dtype=np.float64)),
+                  "occ_vc1": float(q1.sum(dtype=np.float64)
+                                  + stage2.sum(dtype=np.float64)),
+                  "occ_vc2": float(q2.sum(dtype=np.float64)),
+                  "residual": residual}
+            if self._mass_hist is not None:
+                ch["dest_stability_min"] = stab_min
+            self.rec.record(i, ch)
+        if self.wd is not None:
+            sample = {"step": i, "delivered": float(row[0]),
+                      "accepted": float(row[1]),
+                      "offered": float(row[2]),
+                      "occupancy": float(row[3]),
+                      "src_backlog": float(row[4]),
+                      "diverted": float(row[5]),
+                      "residual": residual}
+            if dt is not None:
+                sample["step_seconds"] = dt
+            if mass_min is not None:
+                sample["dest_mass_min"] = mass_min
+                sample["dest_stability_min"] = stab_min
+                if stab_col is not None:
+                    sample["dest_stability_col"] = stab_col
+            self.wd.on_step(sample)
+
+
 def _demand_for(g: Graph, pattern, targets_mask, normalize: bool):
     if targets_mask is None:
         targets_mask = g.meta.get("leaf_mask")
@@ -698,21 +840,35 @@ def saturation_sweep(g: Graph, pattern, routing: str = "minimal",
         loads = np.sort(np.asarray(loads, dtype=np.float64))
         simr = Simulator(g, cfg, targets_mask, demand=demand)
 
+        def stable(r):
+            if per_dest and np.isfinite(r.dest_stability_min):
+                return r.dest_stability_min >= stable_ratio
+            return r.theta >= stable_ratio * r.offered
+
+        n_probes = [0]
+
         def probe(lam, phase):
             # each probe is one spanned run, tagged with the sweep phase
             # (grid / bracket extension / bisection refinement) and
             # counted per phase — the probe-budget telemetry
             obs.counter(f"sim.probes[{phase}]").add(1.0)
             with obs.span("sim.probe", phase=phase, offered=float(lam)):
-                return simr.run(demand, lam, steps, events=events,
-                                per_dest=per_dest)
+                r = simr.run(demand, lam, steps, events=events,
+                             per_dest=per_dest)
+            ok = stable(r)
+            n_probes[0] += 1
+            # live sweep telemetry: one streamed event per probe (no-op
+            # without a streaming session) + the oscillation trigger's
+            # stability-frontier feed
+            obs.emit("sim.probe", pattern=pat.name, routing=cfg.routing,
+                     phase=phase, probe=n_probes[0], offered=float(lam),
+                     theta=r.theta, latency=r.latency, stable=ok)
+            s = obs.current()
+            if s is not None and s.enabled and s.watchdog is not None:
+                s.watchdog.on_probe(float(lam), ok)
+            return r
 
         runs = [probe(lam, "grid") for lam in loads]
-
-        def stable(r):
-            if per_dest and np.isfinite(r.dest_stability_min):
-                return r.dest_stability_min >= stable_ratio
-            return r.theta >= stable_ratio * r.offered
 
         # extend the bracket when the grid missed the knee entirely
         for _ in range(2):

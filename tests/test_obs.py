@@ -220,11 +220,18 @@ def test_null_span_singleton_and_no_allocation():
     assert obs.current() is None
     assert obs.span("a") is obs.span("b") is obs.NULL_SPAN
     assert obs.counter("x") is obs.gauge("y") is obs.NULL_METRIC
+    # the PR 10 hooks share the no-session fast path: no recorder, no
+    # watchdog, and emit is a silent no-op
+    assert obs.recorder() is None and obs.watchdog() is None
+    obs.emit("nobody", listening=True)
 
     def seam():
         # the exact shape of every instrumented hot-loop seam
         with obs.span("hot.loop", k=1):
             obs.counter("hot.count").add(1.0)
+        if obs.recorder() is not None or obs.watchdog() is not None:
+            raise AssertionError("no session: hooks must stay None")
+        obs.emit("hot.event", k=1)
 
     seam()  # warm up any lazy caches
     tracemalloc.start()
@@ -307,6 +314,46 @@ def test_compare_trajectory_mode(tmp_path):
     assert r.returncode == 0
     r = _compare(["--dir", str(tmp_path), "--glob", "NOPE_*.json"])
     assert r.returncode == 0 and "nothing to compare" in r.stdout
+
+
+def test_compare_trajectory_presence_and_err_regression(tmp_path):
+    # an entry disappearing mid-trajectory is informational, never a
+    # failure (sections come and go across PRs)...
+    p1 = {"schema_version": 2,
+          "entries": [{"name": "sim[a]", "seconds": 1.0,
+                       "max_rel_err": 0.01},
+                      {"name": "sim[b]", "seconds": 1.0}],
+          "errors": []}
+    p2 = {"schema_version": 2,
+          "entries": [{"name": "sim[a]", "seconds": 1.0,
+                       "max_rel_err": 0.01}],
+          "errors": []}
+    (tmp_path / "BENCH_1.json").write_text(json.dumps(p1))
+    (tmp_path / "BENCH_2.json").write_text(json.dumps(p2))
+    r = _compare(["--dir", str(tmp_path)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "sim[b]" in r.stdout                    # the presence row prints
+    # ...but a mid-trajectory parity regression fails on that hop even
+    # when wall time is flat and later files stay bad-but-stable
+    p3 = dict(p2, entries=[{"name": "sim[a]", "seconds": 1.0,
+                            "max_rel_err": 0.2}])
+    (tmp_path / "BENCH_3.json").write_text(json.dumps(p3))
+    (tmp_path / "BENCH_4.json").write_text(json.dumps(p3))
+    r = _compare(["--dir", str(tmp_path), "--wall-pct", "1000"])
+    assert r.returncode == 1
+    assert "err" in r.stdout
+
+
+def test_compare_verbose_shows_clean_rows(tmp_path):
+    base, new = tmp_path / "BENCH_a.json", tmp_path / "BENCH_b.json"
+    _write_bench(base, seconds=10.0, err=0.01)
+    _write_bench(new, seconds=10.1, err=0.01)      # within every budget
+    r = _compare([str(base), str(new)])
+    assert r.returncode == 0
+    assert "sim[pn16:ugal]" not in r.stdout        # quiet by default
+    r = _compare([str(base), str(new), "-v"])
+    assert r.returncode == 0
+    assert "sim[pn16:ugal]" in r.stdout            # verbose lists them all
 
 
 def test_compare_bad_file_fails_loud(tmp_path):
